@@ -1,0 +1,51 @@
+"""Per-architecture step benchmark at reduced (CPU-runnable) configs:
+train-step and decode-step wall time for every assigned arch."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models import model as MD
+from repro.optim import adamw, constant
+
+
+def run(csv_rows: list):
+    for arch in configs.ARCHS:
+        cfg = dataclasses.replace(configs.get_smoke(arch), grad_accum=1)
+        params = MD.init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw(constant(1e-3))
+        state = opt.init(params)
+        B, S = 4, 128
+        toks = (jnp.zeros((B, cfg.n_codebooks, S), jnp.int32)
+                if cfg.n_codebooks > 1 else jnp.zeros((B, S), jnp.int32))
+        batch = {"tokens": toks}
+        if cfg.vision_tokens:
+            batch["vision_embeds"] = jnp.zeros((B, cfg.vision_tokens,
+                                                cfg.d_model))
+            if cfg.rope == "mrope":
+                St = S + cfg.vision_tokens
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(St)[None, None], (3, B, St))
+        step = jax.jit(make_train_step(cfg, opt))
+        params, state, _ = step(params, state, batch)   # compile
+        t0 = time.perf_counter()
+        params, state, m = step(params, state, batch)
+        jax.block_until_ready(m["loss"])
+        t_train = time.perf_counter() - t0
+        serve = jax.jit(make_serve_step(cfg))
+        cache = MD.init_cache(cfg, B, 64)
+        tok = (jnp.zeros((B, cfg.n_codebooks), jnp.int32)
+               if cfg.n_codebooks > 1 else jnp.zeros((B,), jnp.int32))
+        nxt, lg, cache = serve(params, cache, tok, jnp.asarray(0, jnp.int32))
+        t0 = time.perf_counter()
+        nxt, lg, cache = serve(params, cache, nxt, jnp.asarray(1, jnp.int32))
+        jax.block_until_ready(lg)
+        t_dec = time.perf_counter() - t0
+        csv_rows.append((f"arch/{arch}/train_step", t_train * 1e6,
+                         f"smoke B{B}xS{S}"))
+        csv_rows.append((f"arch/{arch}/decode_step", t_dec * 1e6, "smoke"))

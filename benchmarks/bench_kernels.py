@@ -1,0 +1,45 @@
+"""Kernel microbenchmark: Pallas (interpret on CPU) vs pure-jnp oracle at
+matched shapes, plus the jnp backend at production-ish 2D sizes.  On real
+TPU the pallas path is the production backend; interpret-mode timing is a
+correctness artifact, not a perf number — flagged in `derived`."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import VolumeGeometry, parallel_beam
+from repro.kernels import ref
+from repro.kernels.fp_par import fp_parallel_sf_pallas
+
+
+def _t(fn, *a, reps=2):
+    out = fn(*a)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv_rows: list):
+    vol = VolumeGeometry(64, 64, 8)
+    g = parallel_beam(24, 8, 96, vol)
+    f = jnp.asarray(np.random.default_rng(0).normal(
+        size=vol.shape).astype(np.float32))
+    t_ref = _t(jax.jit(lambda x: ref.forward(x, g, "sf")), f)
+    csv_rows.append(("kernel/fp_par_sf/jnp_oracle", t_ref * 1e6,
+                     "cpu-jit"))
+    t_pal = _t(lambda x: fp_parallel_sf_pallas(x, g), f, reps=1)
+    csv_rows.append(("kernel/fp_par_sf/pallas", t_pal * 1e6,
+                     "interpret-mode(correctness-only)"))
+    # 2D production-ish slice (the paper's 512^2 limited-angle setting)
+    vol2 = VolumeGeometry(256, 256, 1)
+    g2 = parallel_beam(180, 1, 384, vol2)
+    f2 = jnp.asarray(np.random.default_rng(1).normal(
+        size=vol2.shape).astype(np.float32))
+    t2 = _t(jax.jit(lambda x: ref.forward(x, g2, "sf")), f2)
+    csv_rows.append(("kernel/fp_256x256x180", t2 * 1e6, "cpu-jit"))

@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure + framework extras.
+Prints ``name,us_per_call,derived`` CSV (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_archs, bench_data_consistency,
+                            bench_kernels, bench_projectors, bench_recon)
+    suites = {
+        "table1_projectors": bench_projectors.run,
+        "recon_pipeline": bench_recon.run,
+        "fig3_data_consistency": bench_data_consistency.run,
+        "kernels": bench_kernels.run,
+        "archs": bench_archs.run,
+    }
+    print("name,us_per_call,derived", flush=True)
+    for name, fn in suites.items():
+        if args.only and args.only not in name:
+            continue
+        rows: list = []
+        try:
+            fn(rows)
+        except Exception:  # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            rows.append((f"{name}/ERROR", -1.0, "failed"))
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}", flush=True)
+        # drop compiled programs between suites (CPU-RAM hygiene)
+        import jax
+        jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: the library in 40 lines — build a geometry, project a phantom,
+reconstruct with FBP and SIRT, and take a gradient through the projector.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Projector, VolumeGeometry, parallel_beam
+from repro.data.metrics import psnr
+from repro.data.phantoms import shepp_logan_2d
+from repro.recon import sirt
+
+# 1. describe the scanner (mm units, like the paper)
+vol = VolumeGeometry(nx=128, ny=128, nz=1, dx=1.0, dy=1.0, dz=1.0)
+geom = parallel_beam(n_angles=180, n_rows=1, n_cols=192, vol=vol,
+                     pixel_width=1.0, angular_range=180.0)
+
+# 2. a differentiable projector (matched A / A^T pair)
+proj = Projector(geom, model="sf")     # Separable Footprint model
+
+# 3. forward project a phantom
+f = jnp.asarray(shepp_logan_2d(vol)[:, :, None]) * 0.02   # 1/mm
+sino = proj(f)
+print(f"volume {f.shape} -> sinogram {sino.shape}")
+
+# 4. reconstruct
+rec_fbp = proj.fbp(sino)
+rec_sirt = sirt(proj, sino, n_iters=50)
+print(f"FBP  PSNR {psnr(rec_fbp, f, 0.02):.2f} dB")
+print(f"SIRT PSNR {psnr(rec_sirt, f, 0.02):.2f} dB")
+
+# 5. gradients flow through the projector (the paper's whole point):
+loss = lambda x: 0.5 * jnp.sum((proj(x) - sino) ** 2)
+g = jax.grad(loss)(jnp.zeros_like(f))
+expected = proj.T(proj(jnp.zeros_like(f)) - sino)
+print("grad == A^T(Ax - y):",
+      bool(jnp.allclose(g, expected, rtol=1e-4, atol=1e-5)))

@@ -1,0 +1,36 @@
+"""Core library: the paper's contribution — differentiable CT projectors.
+
+Public API:
+    CTGeometry / VolumeGeometry / parallel_beam / cone_beam / modular_beam
+    Projector            — differentiable forward/back projection module
+    forward_project / back_project — functional matched-pair ops
+    fbp                  — filtered backprojection / FDK
+
+The projector/ops re-exports are lazy to keep `repro.core` importable from
+inside `repro.kernels` (the kernels register themselves with ops at import).
+"""
+from repro.core.geometry import (CTGeometry, VolumeGeometry, cone_beam,
+                                 from_config, modular_beam, parallel_beam)
+
+__all__ = [
+    "CTGeometry", "VolumeGeometry", "parallel_beam", "cone_beam",
+    "modular_beam", "from_config", "Projector", "forward_project",
+    "back_project", "fbp",
+]
+
+# fbp has no import cycle with kernels and must be bound eagerly: once the
+# `repro.core.fbp` submodule is imported, the module object would shadow a
+# lazy attribute of the same name.
+from repro.core.fbp import fbp  # noqa: E402
+
+_LAZY = {"Projector": ("repro.core.projector", "Projector"),
+         "forward_project": ("repro.kernels.ops", "forward_project"),
+         "back_project": ("repro.kernels.ops", "back_project")}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -1,0 +1,152 @@
+"""Filtered backprojection (parallel beam) and FDK (cone beam).
+
+The backprojection used here is the *textbook interpolation backprojector*
+(sample the filtered projection at each voxel's detector coordinate), which
+gives quantitatively correct values in 1/mm.  It is implemented as its own
+vectorized jnp routine rather than reusing the adjoint A^T: the adjoint of
+the SF/Joseph forward model carries path-length weights that are correct for
+gradients but not for the FBP inversion formula.
+
+For non-equispaced angles the per-view quadrature weight is half the angular
+distance between its neighbours (trapezoid rule), matching the paper's
+"non-equispaced projection angles" support.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.filters import filter_sinogram
+from repro.core.geometry import CTGeometry
+
+_EPS = 1e-9
+
+
+def _angle_weights(angles: np.ndarray, full_range: float) -> np.ndarray:
+    """Trapezoid quadrature weights d_phi for (possibly) non-equispaced views."""
+    n = len(angles)
+    if n == 1:
+        return np.asarray([full_range], dtype=np.float32)
+    order = np.argsort(angles)
+    srt = np.asarray(angles)[order]
+    gaps = np.diff(srt)
+    w = np.empty(n)
+    w[0] = gaps[0] / 2 + (full_range - (srt[-1] - srt[0])) / 2
+    w[-1] = gaps[-1] / 2 + (full_range - (srt[-1] - srt[0])) / 2
+    w[1:-1] = (gaps[:-1] + gaps[1:]) / 2
+    out = np.empty(n)
+    out[order] = w
+    return out.astype(np.float32)
+
+
+def _lerp_matrix(src_coords: np.ndarray, dst_coords: np.ndarray) -> np.ndarray:
+    """(n_src, n_dst) dense linear-interpolation matrix (zero outside range)."""
+    n_src = len(src_coords)
+    d = src_coords[1] - src_coords[0] if n_src > 1 else 1.0
+    pos = (dst_coords - src_coords[0]) / d
+    j = np.floor(pos).astype(int)
+    w = pos - j
+    M = np.zeros((n_src, len(dst_coords)), dtype=np.float32)
+    for k, (jj, ww) in enumerate(zip(j, w)):
+        if 0 <= jj < n_src:
+            M[jj, k] += 1 - ww
+        if 0 <= jj + 1 < n_src:
+            M[jj + 1, k] += ww
+    return M
+
+
+def fbp_parallel(sino, geom: CTGeometry, filter_name: str = "ramp"):
+    v = geom.vol
+    nx, ny, nz = v.shape
+    nu, nv = geom.n_cols, geom.n_rows
+    q = filter_sinogram(sino, geom.pixel_width, filter_name)     # (na, nv, nu)
+    X = jnp.asarray(np.repeat(v.x_coords(), ny))                 # (nxy,)
+    Y = jnp.asarray(np.tile(v.y_coords(), nx))
+    u0, du = float(geom.u_coords()[0]), geom.pixel_width
+    Lz = jnp.asarray(_lerp_matrix(geom.v_coords(), v.z_coords()))  # (nv, nz)
+    wts = jnp.asarray(_angle_weights(geom.angles_array(), np.pi))
+    angs = jnp.asarray(geom.angles_array())
+
+    def one(acc, inp):
+        ang, w, qa = inp                                         # qa (nv, nu)
+        c, s = jnp.cos(ang), jnp.sin(ang)
+        ui = (Y * c - X * s - u0) / du                           # (nxy,)
+        j = jnp.floor(ui).astype(jnp.int32)
+        t = ui - j
+        ok0 = (j >= 0) & (j < nu)
+        ok1 = (j + 1 >= 0) & (j + 1 < nu)
+        g0 = jnp.take(qa, jnp.clip(j, 0, nu - 1), axis=1)        # (nv, nxy)
+        g1 = jnp.take(qa, jnp.clip(j + 1, 0, nu - 1), axis=1)
+        S = g0 * jnp.where(ok0, 1 - t, 0.0) + g1 * jnp.where(ok1, t, 0.0)
+        return acc + w * jnp.einsum("vq,vz->qz", S, Lz).reshape(nx, ny, nz), 0
+
+    acc0 = jnp.zeros(v.shape, sino.dtype)
+    acc, _ = jax.lax.scan(one, acc0, (angs, wts, q))
+    return acc
+
+
+def fbp_cone(sino, geom: CTGeometry, filter_name: str = "ramp"):
+    """FDK reconstruction (flat detector)."""
+    v = geom.vol
+    nx, ny, nz = v.shape
+    nu, nv = geom.n_cols, geom.n_rows
+    sod, sdd = geom.sod, geom.sdd
+    us = jnp.asarray(geom.u_coords())
+    vs = jnp.asarray(geom.v_coords())
+    # cosine pre-weight
+    cw = sdd / jnp.sqrt(sdd ** 2 + us[None, :] ** 2 + vs[:, None] ** 2)
+    q = filter_sinogram(sino * cw[None], geom.pixel_width, filter_name)
+    # The ramp filter acts at detector scale; frequencies at the isocenter are
+    # higher by the magnification sdd/sod, so rescale the filtered data.
+    q = q * (sdd / sod)
+    X = jnp.asarray(np.repeat(v.x_coords(), ny))
+    Y = jnp.asarray(np.tile(v.y_coords(), nx))
+    Z = jnp.asarray(v.z_coords())
+    u0, du = float(geom.u_coords()[0]), geom.pixel_width
+    v0, dv = float(geom.v_coords()[0]), geom.pixel_height
+    rng = 2 * np.pi
+    wts = jnp.asarray(_angle_weights(geom.angles_array(), rng)) / 2.0
+    angs = jnp.asarray(geom.angles_array())
+
+    def one(acc, inp):
+        ang, w, qa = inp
+        c, s = jnp.cos(ang), jnp.sin(ang)
+        ell = sod - (X * c + Y * s)                              # (nxy,)
+        ell = jnp.maximum(ell, _EPS)
+        ustar = sdd * (Y * c - X * s) / ell
+        ui = (ustar - u0) / du
+        j = jnp.floor(ui).astype(jnp.int32)
+        t = ui - j
+        ok0 = (j >= 0) & (j < nu)
+        ok1 = (j + 1 >= 0) & (j + 1 < nu)
+        g0 = jnp.take(qa, jnp.clip(j, 0, nu - 1), axis=1)
+        g1 = jnp.take(qa, jnp.clip(j + 1, 0, nu - 1), axis=1)
+        S = g0 * jnp.where(ok0, 1 - t, 0.0) + g1 * jnp.where(ok1, t, 0.0)
+        S = S.T                                                  # (nxy, nv)
+        vi = (sdd * Z[None, :] / ell[:, None] - v0) / dv         # (nxy, nz)
+        jv = jnp.floor(vi).astype(jnp.int32)
+        tv = vi - jv
+        okv0 = (jv >= 0) & (jv < nv)
+        okv1 = (jv + 1 >= 0) & (jv + 1 < nv)
+        h0 = jnp.take_along_axis(S, jnp.clip(jv, 0, nv - 1), axis=1)
+        h1 = jnp.take_along_axis(S, jnp.clip(jv + 1, 0, nv - 1), axis=1)
+        val = h0 * jnp.where(okv0, 1 - tv, 0.0) + h1 * jnp.where(okv1, tv, 0.0)
+        val = val * (sod ** 2 / ell[:, None] ** 2)
+        return acc + w * val.reshape(nx, ny, nz), 0
+
+    acc0 = jnp.zeros(v.shape, sino.dtype)
+    acc, _ = jax.lax.scan(one, acc0, (angs, wts, q))
+    return acc
+
+
+def fbp(sino, geom: CTGeometry, model: str = "sf", backend: str = "auto",
+        filter_name: str = "ramp"):
+    if geom.geom_type == "parallel":
+        return fbp_parallel(sino, geom, filter_name)
+    if geom.geom_type == "cone":
+        if geom.detector_type != "flat":
+            raise NotImplementedError("FDK implemented for flat detectors")
+        return fbp_cone(sino, geom, filter_name)
+    raise NotImplementedError("FBP needs parallel or cone geometry; use "
+                              "iterative recon (repro.recon) for modular")

@@ -1,0 +1,292 @@
+"""CT scanner geometry and reconstruction-volume specifications.
+
+Conventions (all quantities in mm; reconstructed values in 1/mm — the paper's
+"quantitatively accurate" requirement):
+
+Volume
+    ``f[ix, iy, iz]`` with shape ``(nx, ny, nz)``.  World coordinates::
+
+        x(ix) = (ix - (nx-1)/2) * dx + offset_x          (same for y, z)
+
+    ``z`` is the rotation axis.  ``z`` is deliberately the *last* axis so the
+    TPU kernels can put it on the 128-lane dimension (axial geometries are
+    embarrassingly vectorizable over z).
+
+Projections (sinogram)
+    ``p[ia, iv, iu]`` with shape ``(n_angles, n_rows, n_cols)``; ``v`` indexes
+    detector rows (parallel to z), ``u`` detector columns::
+
+        u(iu) = (iu - (nu-1)/2) * du + center_col_mm
+        v(iv) = (iv - (nv-1)/2) * dv + center_row_mm
+
+Geometry types (the three from the paper):
+    * ``parallel``  — rays along (cos phi, sin phi, 0); detector u-axis is
+      (-sin phi, cos phi, 0), v-axis is +z.
+    * ``cone``      — point source at radius ``sod`` from the rotation axis,
+      flat or curved detector at distance ``sdd`` from the source.
+      Source position: ``s(phi) = (sod cos phi, sod sin phi, 0)``;
+      detector center: ``s - sdd*(cos phi, sin phi, 0)`` (+ shifts).
+    * ``modular``   — arbitrary per-view source position / detector center /
+      detector (u, v) axes.
+
+The dataclasses are frozen and contain only Python scalars / tuples /
+numpy arrays so a geometry instance is *static metadata*: it is safe (and
+intended) to close over it inside ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "VolumeGeometry",
+    "CTGeometry",
+    "parallel_beam",
+    "cone_beam",
+    "modular_beam",
+    "from_config",
+]
+
+
+def _as_f32(a) -> np.ndarray:
+    return np.asarray(a, dtype=np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class VolumeGeometry:
+    """Reconstruction volume: ``(nx, ny, nz)`` voxels of size ``(dx, dy, dz)`` mm."""
+
+    nx: int
+    ny: int
+    nz: int
+    dx: float = 1.0
+    dy: float = 1.0
+    dz: float = 1.0
+    offset_x: float = 0.0
+    offset_y: float = 0.0
+    offset_z: float = 0.0
+
+    def __post_init__(self):
+        if self.nx <= 0 or self.ny <= 0 or self.nz <= 0:
+            raise ValueError(f"volume dims must be positive, got {(self.nx, self.ny, self.nz)}")
+        if self.dx <= 0 or self.dy <= 0 or self.dz <= 0:
+            raise ValueError("voxel sizes must be positive")
+        if not math.isclose(self.dx, self.dy, rel_tol=1e-6):
+            # The SF transaxial footprint assumes square in-plane voxels
+            # (same restriction as LEAP).
+            raise ValueError("in-plane voxels must be square (dx == dy)")
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        return (self.nx, self.ny, self.nz)
+
+    def x_coords(self) -> np.ndarray:
+        return _as_f32((np.arange(self.nx) - (self.nx - 1) / 2.0) * self.dx + self.offset_x)
+
+    def y_coords(self) -> np.ndarray:
+        return _as_f32((np.arange(self.ny) - (self.ny - 1) / 2.0) * self.dy + self.offset_y)
+
+    def z_coords(self) -> np.ndarray:
+        return _as_f32((np.arange(self.nz) - (self.nz - 1) / 2.0) * self.dz + self.offset_z)
+
+    @property
+    def radius(self) -> float:
+        """Circumscribing transaxial radius of the volume (mm)."""
+        rx = self.nx * self.dx / 2.0 + abs(self.offset_x)
+        ry = self.ny * self.dy / 2.0 + abs(self.offset_y)
+        return math.hypot(rx, ry)
+
+    def scale(self, s: float) -> "VolumeGeometry":
+        return dataclasses.replace(
+            self, dx=self.dx * s, dy=self.dy * s, dz=self.dz * s,
+            offset_x=self.offset_x * s, offset_y=self.offset_y * s,
+            offset_z=self.offset_z * s)
+
+
+@dataclasses.dataclass(frozen=True)
+class CTGeometry:
+    """Full scanner description: projections layout + beam geometry + volume."""
+
+    geom_type: str                      # "parallel" | "cone" | "modular"
+    vol: VolumeGeometry
+    n_angles: int
+    n_rows: int                         # detector rows (v / axial)
+    n_cols: int                         # detector columns (u / transaxial)
+    pixel_height: float = 1.0           # dv, mm
+    pixel_width: float = 1.0            # du, mm
+    # Either an angular range (equispaced) or an explicit tuple of angles (rad).
+    angles: Tuple[float, ...] = ()
+    sod: float = 0.0                    # source-to-object distance (cone)
+    sdd: float = 0.0                    # source-to-detector distance (cone)
+    center_row: float = 0.0             # vertical detector shift, mm
+    center_col: float = 0.0             # horizontal detector shift, mm
+    detector_type: str = "flat"         # "flat" | "curved"  (cone only)
+    # Modular geometry: per-view 3-vectors, shape (n_angles, 3).
+    source_pos: Optional[np.ndarray] = None
+    det_center: Optional[np.ndarray] = None
+    det_u: Optional[np.ndarray] = None  # unit vector along columns
+    det_v: Optional[np.ndarray] = None  # unit vector along rows
+
+    def __post_init__(self):
+        if self.geom_type not in ("parallel", "cone", "modular"):
+            raise ValueError(f"unknown geometry type {self.geom_type!r}")
+        if self.n_angles <= 0 or self.n_rows <= 0 or self.n_cols <= 0:
+            raise ValueError("projection dims must be positive")
+        if self.pixel_width <= 0 or self.pixel_height <= 0:
+            raise ValueError("pixel sizes must be positive")
+        if len(self.angles) != self.n_angles and self.geom_type != "modular":
+            raise ValueError(
+                f"angles has {len(self.angles)} entries, expected n_angles={self.n_angles}")
+        if self.geom_type == "cone":
+            if not (self.sdd > self.sod > 0):
+                raise ValueError("cone beam requires sdd > sod > 0")
+            if self.detector_type not in ("flat", "curved"):
+                raise ValueError(f"unknown detector type {self.detector_type!r}")
+            if self.sod <= self.vol.radius:
+                raise ValueError(
+                    f"source (sod={self.sod}) inside volume radius {self.vol.radius:.2f}")
+        if self.geom_type == "modular":
+            for name in ("source_pos", "det_center", "det_u", "det_v"):
+                v = getattr(self, name)
+                if v is None or np.asarray(v).shape != (self.n_angles, 3):
+                    raise ValueError(f"modular geometry needs {name} with shape (n_angles, 3)")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def sino_shape(self) -> Tuple[int, int, int]:
+        return (self.n_angles, self.n_rows, self.n_cols)
+
+    def angles_array(self) -> np.ndarray:
+        return _as_f32(self.angles)
+
+    def u_coords(self) -> np.ndarray:
+        return _as_f32((np.arange(self.n_cols) - (self.n_cols - 1) / 2.0)
+                       * self.pixel_width + self.center_col)
+
+    def v_coords(self) -> np.ndarray:
+        return _as_f32((np.arange(self.n_rows) - (self.n_rows - 1) / 2.0)
+                       * self.pixel_height + self.center_row)
+
+    @property
+    def magnification(self) -> float:
+        return self.sdd / self.sod if self.geom_type == "cone" else 1.0
+
+    def max_footprint_cols(self) -> int:
+        """Static bound on how many detector columns one voxel can cover (SF)."""
+        mag = 1.0
+        if self.geom_type == "cone":
+            mag = self.sdd / max(self.sod - self.vol.radius, 1e-3)
+        width = math.sqrt(2.0) * self.vol.dx * mag
+        return int(math.ceil(width / self.pixel_width)) + 2
+
+    def max_footprint_rows(self) -> int:
+        """Static bound on detector rows covered by one voxel (SF, axial)."""
+        mag = 1.0
+        if self.geom_type == "cone":
+            mag = self.sdd / max(self.sod - self.vol.radius, 1e-3)
+        return int(math.ceil(self.vol.dz * mag / self.pixel_height)) + 2
+
+    def with_angles(self, angles) -> "CTGeometry":
+        angles = tuple(float(a) for a in np.asarray(angles).ravel())
+        return dataclasses.replace(self, angles=angles, n_angles=len(angles))
+
+    def subset(self, idx) -> "CTGeometry":
+        """Geometry restricted to a subset of views (few-view / limited-angle)."""
+        idx = np.asarray(idx)
+        kw = {}
+        if self.geom_type == "modular":
+            for name in ("source_pos", "det_center", "det_u", "det_v"):
+                kw[name] = np.asarray(getattr(self, name))[idx]
+            return dataclasses.replace(self, n_angles=len(idx), angles=(0.0,) * 0, **kw)
+        ang = tuple(np.asarray(self.angles)[idx].tolist())
+        return dataclasses.replace(self, angles=ang, n_angles=len(idx))
+
+    # Hashable / usable as a static jit argument.
+    def key(self) -> str:
+        d = dataclasses.asdict(self)
+        for k, v in d.items():
+            if isinstance(v, np.ndarray):
+                d[k] = v.tolist()
+        return json.dumps(d, sort_keys=True, default=str)
+
+
+# ---------------------------------------------------------------------- #
+# Constructors
+# ---------------------------------------------------------------------- #
+def _equi_angles(n: int, arange_deg: float, start_deg: float = 0.0) -> Tuple[float, ...]:
+    a = start_deg + np.arange(n) * (arange_deg / n)
+    return tuple(np.deg2rad(a).tolist())
+
+
+def parallel_beam(n_angles: int, n_rows: int, n_cols: int, vol: VolumeGeometry,
+                  pixel_width: float = 1.0, pixel_height: float = 1.0,
+                  angular_range: float = 180.0, angles=None,
+                  center_row: float = 0.0, center_col: float = 0.0) -> CTGeometry:
+    ang = (tuple(float(x) for x in np.asarray(angles).ravel()) if angles is not None
+           else _equi_angles(n_angles, angular_range))
+    return CTGeometry("parallel", vol, n_angles, n_rows, n_cols,
+                      pixel_height, pixel_width, ang,
+                      center_row=center_row, center_col=center_col)
+
+
+def cone_beam(n_angles: int, n_rows: int, n_cols: int, vol: VolumeGeometry,
+              sod: float, sdd: float,
+              pixel_width: float = 1.0, pixel_height: float = 1.0,
+              angular_range: float = 360.0, angles=None,
+              center_row: float = 0.0, center_col: float = 0.0,
+              detector_type: str = "flat") -> CTGeometry:
+    ang = (tuple(float(x) for x in np.asarray(angles).ravel()) if angles is not None
+           else _equi_angles(n_angles, angular_range))
+    return CTGeometry("cone", vol, n_angles, n_rows, n_cols,
+                      pixel_height, pixel_width, ang, sod=sod, sdd=sdd,
+                      center_row=center_row, center_col=center_col,
+                      detector_type=detector_type)
+
+
+def modular_beam(source_pos, det_center, det_u, det_v,
+                 n_rows: int, n_cols: int, vol: VolumeGeometry,
+                 pixel_width: float = 1.0, pixel_height: float = 1.0) -> CTGeometry:
+    source_pos = _as_f32(source_pos)
+    n = source_pos.shape[0]
+    return CTGeometry("modular", vol, n, n_rows, n_cols,
+                      pixel_height, pixel_width, tuple([0.0] * n),
+                      source_pos=source_pos, det_center=_as_f32(det_center),
+                      det_u=_as_f32(det_u), det_v=_as_f32(det_v))
+
+
+def cone_as_modular(g: CTGeometry) -> CTGeometry:
+    """Re-express an axial cone-beam geometry in modular form (for testing the
+    modular path against the cone path)."""
+    assert g.geom_type == "cone" and g.detector_type == "flat"
+    ang = np.asarray(g.angles)
+    c, s = np.cos(ang), np.sin(ang)
+    src = np.stack([g.sod * c, g.sod * s, np.zeros_like(c)], -1)
+    ctr = np.stack([(g.sod - g.sdd) * c - g.center_col * (-s),
+                    (g.sod - g.sdd) * s - g.center_col * c,
+                    np.full_like(c, -g.center_row)], -1)
+    # det_center is the *physical* location of detector coordinate (u=0,v=0)
+    # minus shifts; keep shifts inside u/v coords instead:
+    ctr = np.stack([(g.sod - g.sdd) * c, (g.sod - g.sdd) * s, np.zeros_like(c)], -1)
+    du = np.stack([-s, c, np.zeros_like(c)], -1)
+    dv = np.stack([np.zeros_like(c), np.zeros_like(c), np.ones_like(c)], -1)
+    return modular_beam(src, ctr, du, dv, g.n_rows, g.n_cols, g.vol,
+                        g.pixel_width, g.pixel_height)
+
+
+def from_config(cfg: dict) -> CTGeometry:
+    """Build a geometry from a plain dict (e.g. parsed from a JSON/YAML file) —
+    the paper's 'configuration file' interface."""
+    cfg = dict(cfg)
+    vol = VolumeGeometry(**cfg.pop("volume"))
+    t = cfg.pop("geom_type")
+    if t == "parallel":
+        return parallel_beam(vol=vol, **cfg)
+    if t == "cone":
+        return cone_beam(vol=vol, **cfg)
+    if t == "modular":
+        return modular_beam(vol=vol, **cfg)
+    raise ValueError(f"unknown geom_type {t!r}")

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels + pure-jnp oracles for the differentiable projectors.
+
+Importing this package registers every available Pallas kernel with the
+dispatch table in ``repro.kernels.ops``.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+
+
+def _register_all():
+    from repro.kernels import fp_par
+    fp_par.register()
+    try:
+        from repro.kernels import fp_cone
+        fp_cone.register()
+    except ImportError:
+        pass
+
+
+_register_all()

@@ -1,0 +1,300 @@
+"""Pallas TPU kernels: parallel-beam Separable-Footprint forward/back projection.
+
+TPU-native design (see DESIGN.md §2).  LEAP's CUDA kernels are
+thread-per-output with 3D texture gathers; here each Pallas program computes a
+``(BU detector columns) x (BV detector rows)`` output tile for one view by
+looping over the volume's *loop axis* and, per step, contracting a
+``(BU, W)`` footprint-weight tile against a ``(W, BV)`` volume window on the
+MXU.  The footprint weights are exact SF trapezoid-pixel integrals; the
+``W``-wide window along the *gathered axis* is addressed with a scalar
+``pl.dynamic_slice`` start computed from per-view affine coefficients held in
+SMEM (scalar prefetch) — no gather hardware required.
+
+Views are partitioned at trace time (geometry is static) into an
+``x-gathered`` group (|sin| >= |cos|) and a ``y-gathered`` group, which run as
+two ``pallas_call``s over the volume and its transpose; this replaces the
+per-ray driving-axis branch of GPU implementations.
+
+The axial (z -> detector row) part of the separable footprint is an
+angle-independent banded matrix for parallel beams and is applied as a single
+einsum outside the kernel (it maps to the MXU directly).
+
+Both kernels share the weight math; the backprojector is the exact transpose
+of the forward (same coefficients, transposed contraction), so the pair is
+*matched* in the paper's sense.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.geometry import CTGeometry
+from repro.kernels.footprint import trapezoid_pixel_weight
+from repro.kernels.ref import _z_overlap_matrix
+
+# Default tile sizes: BV on the 128-wide lane axis, BU on sublanes.
+BU = 16
+BV = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+# --------------------------------------------------------------------------- #
+# Per-view affine coefficients (static, numpy)
+# --------------------------------------------------------------------------- #
+def _view_params(geom: CTGeometry) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split views into x-gathered / y-gathered groups and compute, per view,
+    the coefficients of  uc(gi, li) = P*gi + Q*li + R  (detector coordinate of
+    the voxel center at gathered-index gi, loop-index li) plus the SF
+    trapezoid parameters (hs, hd, h)."""
+    v = geom.vol
+    ang = geom.angles_array()
+    c, s = np.cos(ang), np.sin(ang)
+    x0, y0 = float(v.x_coords()[0]), float(v.y_coords()[0])
+    a = v.dx * np.abs(c)
+    b = v.dx * np.abs(s)
+    hs = 0.5 * (a + b)
+    hd = 0.5 * np.abs(a - b)
+    h = v.dx / np.maximum(np.abs(c), np.abs(s))
+    gx = np.abs(s) >= np.abs(c)          # x-gathered group
+    # x-gathered: gi = ix, li = iy:  uc = -s*dx*gi + c*dy*li + (c*y0 - s*x0)
+    px = np.stack([-s * v.dx, c * v.dy, c * y0 - s * x0, hs, hd, h], -1)
+    # y-gathered: gi = iy, li = ix:  uc =  c*dy*gi - s*dx*li + (c*y0 - s*x0)
+    py = np.stack([c * v.dy, -s * v.dx, c * y0 - s * x0, hs, hd, h], -1)
+    idx_x = np.nonzero(gx)[0]
+    idx_y = np.nonzero(~gx)[0]
+    return (px[idx_x].astype(np.float32), py[idx_y].astype(np.float32),
+            np.concatenate([idx_x, idx_y]))
+
+
+def _window_size(geom: CTGeometry, bu: int) -> int:
+    """Static bound on the gathered-axis window covering one u-tile.
+    |duc/dgi| >= dx/sqrt(2) in-group, so the tile spans <= bu*du*sqrt(2)/dx
+    voxels, plus the footprint half-width margin on each side."""
+    du, dx = geom.pixel_width, geom.vol.dx
+    span = bu * du * math.sqrt(2.0) / dx
+    margin = 2.0 * (math.sqrt(2.0) / 2.0 * dx + du) / dx + 2.0
+    w = int(math.ceil(span + 2 * margin)) + 2
+    return _round_up(max(w, 8), 8)
+
+
+# --------------------------------------------------------------------------- #
+# Forward kernel
+# --------------------------------------------------------------------------- #
+def _fp_kernel(params_ref,            # SMEM (n_views, 6)
+               g_ref,                 # VMEM (NG, 1, BV) volume line
+               out_ref,               # VMEM (BA, BU, BV) sino tile
+               *, W: int, u0: float, du: float, ng: int, bu: int, bv: int,
+               ba: int):
+    """One program: for BA consecutive views, contract a (BU, W) footprint
+    tile against the same (W, BV) volume window on the MXU.
+
+    Angle-blocking (ba > 1) is the §Perf-CT hillclimb: the volume line
+    g[:, l, vblock] — the dominant HBM stream — is fetched ONCE per program
+    and reused for all BA views, dividing volume traffic by BA."""
+    ab = pl.program_id(0)
+    ub = pl.program_id(1)
+    li = pl.program_id(3)
+
+    @pl.when(li == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lif = li.astype(jnp.float32)
+    u_first = u0 + (ub * bu) * du
+    u_last = u_first + (bu - 1) * du
+
+    for j in range(ba):
+        a = ab * ba + j
+        P = params_ref[a, 0]
+        Q = params_ref[a, 1]
+        R = params_ref[a, 2]
+        hs = params_ref[a, 3]
+        hd = params_ref[a, 4]
+        h = params_ref[a, 5]
+
+        gi_a = (u_first - R - Q * lif) / P
+        gi_b = (u_last - R - Q * lif) / P
+        start = jnp.floor(jnp.minimum(gi_a, gi_b)).astype(jnp.int32) - (
+            W - jnp.abs(jnp.ceil(gi_b - gi_a)).astype(jnp.int32)) // 2
+        start = jnp.clip(start, 0, max(ng - W, 0))
+
+        win = g_ref[pl.ds(start, W), 0, :]                 # (W, BV)
+        gi_abs = start.astype(jnp.float32) + jax.lax.broadcasted_iota(
+            jnp.float32, (1, W), 1)                        # (1, W)
+        uc = P * gi_abs + Q * lif + R                      # (1, W)
+        uk = u_first + du * jax.lax.broadcasted_iota(jnp.float32, (bu, 1), 0)
+        el = uk - du / 2.0                                 # (bu, 1)
+        wgt = trapezoid_pixel_weight(el, el + du,
+                                     uc - hs, uc - hd, uc + hd, uc + hs, h)
+        out_ref[j] += jax.lax.dot_general(
+            wgt, win, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def _run_fp_group(g, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
+                  bu: int, bv: int, ba: int = 1):
+    """g: (nx, ny, NVp) volume with v already padded to a BV multiple."""
+    if params.shape[0] == 0:
+        return jnp.zeros((0,) + (0, 0), g.dtype)
+    vol = geom.vol
+    if not gathered_x:
+        g = jnp.swapaxes(g, 0, 1)
+    ng, nl, nvp = g.shape
+    na = params.shape[0]
+    ba = max(1, min(ba, na))
+    nap = _round_up(na, ba)
+    if nap != na:   # pad views with harmless duplicates; dropped after
+        params = np.concatenate([params, np.repeat(params[-1:],
+                                                   nap - na, 0)], 0)
+    nup = _round_up(geom.n_cols, bu)
+    W = min(_window_size(geom, bu), ng)
+    u0 = float(geom.u_coords()[0])
+    grid = (nap // ba, nup // bu, nvp // bv, nl)
+    kernel = functools.partial(_fp_kernel, W=W, u0=u0, du=geom.pixel_width,
+                               ng=ng, bu=bu, bv=bv, ba=ba)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((ng, 1, bv),
+                                   lambda ab, ub, vb, l, *_: (0, l, vb))],
+            out_specs=pl.BlockSpec((ba, bu, bv),
+                                   lambda ab, ub, vb, l, *_: (ab, ub, vb)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nap, nup, nvp), g.dtype),
+        interpret=_interpret(),
+    )(jnp.asarray(params), g)
+    return out[:na]
+
+
+def fp_parallel_sf_pallas(f, geom: CTGeometry, bu: int = BU, bv: int = BV,
+                          ba: int = 1):
+    """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols)."""
+    vol = geom.vol
+    Fz = jnp.asarray(_z_overlap_matrix(geom))              # (nz, nv)
+    g = jnp.einsum("xyz,zv->xyv", f, Fz)                   # axial footprint
+    nvp = _round_up(geom.n_rows, bv)
+    g = jnp.pad(g, ((0, 0), (0, 0), (0, nvp - geom.n_rows)))
+    px, py, order = _view_params(geom)
+    outs = []
+    if px.shape[0]:
+        outs.append(_run_fp_group(g, px, geom, True, bu, bv, ba))
+    if py.shape[0]:
+        outs.append(_run_fp_group(g, py, geom, False, bu, bv, ba))
+    out = jnp.concatenate(outs, axis=0)                    # (na, NUp, NVp)
+    out = out[:, :geom.n_cols, :geom.n_rows]
+    inv = np.argsort(order)
+    return jnp.swapaxes(out[inv], 1, 2)                    # (na, nv, nu)
+
+
+# --------------------------------------------------------------------------- #
+# Backprojection kernel (exact transpose)
+# --------------------------------------------------------------------------- #
+def _bp_kernel(params_ref,            # SMEM (n_views, 6)
+               q_ref,                 # VMEM (1, NU, BV) sino stripe (u-major)
+               out_ref,               # VMEM (BG, 1, BV) volume tile
+               *, Wu: int, u0: float, du: float, nu: int, bg: int, bv: int):
+    gb = pl.program_id(0)
+    li = pl.program_id(1)
+    a = pl.program_id(3)
+
+    @pl.when(a == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    P = params_ref[a, 0]
+    Q = params_ref[a, 1]
+    R = params_ref[a, 2]
+    hs = params_ref[a, 3]
+    hd = params_ref[a, 4]
+    h = params_ref[a, 5]
+
+    lif = li.astype(jnp.float32)
+    gi0 = (gb * bg)
+    uc_a = P * gi0 + Q * lif + R
+    uc_b = P * (gi0 + bg - 1) + Q * lif + R
+    ustart = jnp.floor((jnp.minimum(uc_a, uc_b) - u0) / du).astype(jnp.int32) - (
+        Wu - jnp.abs(jnp.ceil((uc_b - uc_a) / du)).astype(jnp.int32)) // 2
+    ustart = jnp.clip(ustart, 0, max(nu - Wu, 0))
+
+    qwin = q_ref[0, pl.ds(ustart, Wu), :]                  # (Wu, BV)
+    gi_abs = gi0 + jax.lax.broadcasted_iota(jnp.float32, (bg, 1), 0)
+    uc = P * gi_abs + Q * lif + R                          # (bg, 1)
+    uk = u0 + (ustart.astype(jnp.float32)
+               + jax.lax.broadcasted_iota(jnp.float32, (1, Wu), 1)) * du
+    el = uk - du / 2.0                                     # (1, Wu)
+    wgt = trapezoid_pixel_weight(el, el + du,
+                                 uc - hs, uc - hd, uc + hd, uc + hs, h)
+    out_ref[:, 0, :] += jax.lax.dot_general(
+        wgt, qwin, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
+                  bg: int, bv: int):
+    """q: (na_group, NUp, NVp) u-major sino slice for this view group.
+    Returns the gathered-axis-major volume accumulator (NG, NL, NVp)."""
+    vol = geom.vol
+    ng, nl = (vol.nx, vol.ny) if gathered_x else (vol.ny, vol.nx)
+    na, nup, nvp = q.shape
+    ngp = _round_up(ng, bg)
+    du, dx = geom.pixel_width, vol.dx
+    Wu = min(_round_up(int(math.ceil(bg * dx / du)) + 8, 8), nup)
+    u0 = float(geom.u_coords()[0])
+    grid = (ngp // bg, nl, nvp // bv, na)
+    kernel = functools.partial(_bp_kernel, Wu=Wu, u0=u0, du=du, nu=nup,
+                               bg=bg, bv=bv)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, nup, bv), lambda gb, l, vb, a, *_: (a, 0, vb))],
+            out_specs=pl.BlockSpec((bg, 1, bv), lambda gb, l, vb, a, *_: (gb, l, vb)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((ngp, nl, nvp), q.dtype),
+        interpret=_interpret(),
+    )(jnp.asarray(params), q)
+    return out[:ng]
+
+
+def bp_parallel_sf_pallas(sino, geom: CTGeometry, bg: int = BU, bv: int = BV):
+    """sino: (n_angles, n_rows, n_cols) -> volume (nx, ny, nz).
+    Exact transpose of ``fp_parallel_sf_pallas``."""
+    vol = geom.vol
+    nvp = _round_up(geom.n_rows, bv)
+    q = jnp.swapaxes(sino, 1, 2)                           # (na, nu, nv)
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, nvp - geom.n_rows)))
+    px, py, order = _view_params(geom)
+    q = q[order]                                           # group-major view order
+    nax = px.shape[0]
+    acc = jnp.zeros((vol.nx, vol.ny, nvp), sino.dtype)
+    if nax:
+        acc = acc + _run_bp_group(q[:nax], px, geom, True, bg, bv)
+    if py.shape[0]:
+        accy = _run_bp_group(q[nax:], py, geom, False, bg, bv)
+        acc = acc + jnp.swapaxes(accy, 0, 1)
+    Fz = jnp.asarray(_z_overlap_matrix(geom))              # (nz, nv)
+    acc = acc[:, :, :geom.n_rows]
+    return jnp.einsum("xyv,zv->xyz", acc, Fz)              # transpose of axial part
+
+
+def register():
+    from repro.kernels import ops
+    ops.register_kernel("parallel", "sf", fp_parallel_sf_pallas,
+                        bp_parallel_sf_pallas)

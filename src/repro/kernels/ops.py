@@ -1,0 +1,115 @@
+"""Public differentiable projection ops.
+
+``forward_project`` / ``back_project`` are linear maps wired together as a
+*matched pair* through ``jax.custom_vjp``:
+
+    d/df ||forward_project(f) - y||^2  ==  2 * back_project(forward_project(f) - y)
+
+exactly (not approximately), which is the stability requirement the paper
+places on iterative/DL use.  The VJP of the forward op *is* the back op and
+vice versa, so autodiff never differentiates through the projector internals.
+
+Backends:
+    * ``ref``    — pure-jnp oracles (runs everywhere; the CPU path).
+    * ``pallas`` — Pallas TPU kernels (``interpret=True`` on CPU for tests).
+    * ``auto``   — pallas for geometry/model pairs with a kernel, else ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import CTGeometry
+from repro.kernels import ref
+
+_KERNEL_TABLE = {}  # {(geom_type, model): (fp_fn, bp_fn)} — filled by kernels pkg
+
+
+def register_kernel(geom_type: str, model: str, fp: Callable, bp: Callable):
+    _KERNEL_TABLE[(geom_type, model)] = (fp, bp)
+
+
+@functools.lru_cache(maxsize=256)
+def _build_ops(geom_key: str, model: str, backend: str) -> Tuple[Callable, Callable]:
+    geom = _GEOM_CACHE[geom_key]
+    key = (geom.geom_type, model)
+    # "auto": use the Pallas kernels on TPU; the pure-jnp path elsewhere
+    # (interpret-mode Pallas is for correctness tests, not production CPU use).
+    use_pallas = (backend == "pallas") or (
+        backend == "auto" and key in _KERNEL_TABLE
+        and jax.default_backend() == "tpu")
+    if use_pallas:
+        if key not in _KERNEL_TABLE:
+            raise NotImplementedError(f"no pallas kernel for {key}")
+        kfp, kbp = _KERNEL_TABLE[key]
+        raw_fp = lambda f: kfp(f, geom)
+        raw_bp = lambda p: kbp(p, geom)
+    else:
+        raw_fp = lambda f: ref.forward(f, geom, model)
+        raw_bp = lambda p: ref.adjoint(p, geom, model)
+
+    @jax.custom_vjp
+    def fp(f):
+        return raw_fp(f)
+
+    def fp_fwd(f):
+        return raw_fp(f), None
+
+    def fp_bwd(_, g):
+        return (raw_bp(g),)
+
+    fp.defvjp(fp_fwd, fp_bwd)
+
+    @jax.custom_vjp
+    def bp(p):
+        return raw_bp(p)
+
+    def bp_fwd(p):
+        return raw_bp(p), None
+
+    def bp_bwd(_, g):
+        return (raw_fp(g),)
+
+    bp.defvjp(bp_fwd, bp_bwd)
+    return fp, bp
+
+
+_GEOM_CACHE: dict = {}
+
+
+def get_ops(geom: CTGeometry, model: str = "sf",
+            backend: str = "auto") -> Tuple[Callable, Callable]:
+    """Return the (forward, back) matched differentiable pair for a geometry."""
+    key = geom.key() + f"|{id(type(geom))}"
+    _GEOM_CACHE[key] = geom
+    return _build_ops(key, model, backend)
+
+
+def _batched(op: Callable, x, vol_ndim_in: int):
+    """Apply op over optional leading batch dims."""
+    extra = x.ndim - vol_ndim_in
+    if extra == 0:
+        return op(x)
+    if extra == 1:
+        return jax.vmap(op)(x)
+    lead = x.shape[:extra]
+    flat = x.reshape((-1,) + x.shape[extra:])
+    out = jax.vmap(op)(flat)
+    return out.reshape(lead + out.shape[1:])
+
+
+def forward_project(f, geom: CTGeometry, model: str = "sf",
+                    backend: str = "auto"):
+    """A @ f.  ``f``: (..., nx, ny, nz) -> (..., n_angles, n_rows, n_cols)."""
+    fp, _ = get_ops(geom, model, backend)
+    return _batched(fp, f, 3)
+
+
+def back_project(p, geom: CTGeometry, model: str = "sf",
+                 backend: str = "auto"):
+    """A^T @ p.  ``p``: (..., n_angles, n_rows, n_cols) -> (..., nx, ny, nz)."""
+    _, bp = get_ops(geom, model, backend)
+    return _batched(bp, p, 3)

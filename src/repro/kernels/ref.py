@@ -1,0 +1,365 @@
+"""Pure-jnp reference projectors (oracles).
+
+These are fully differentiable, jit-able implementations of the forward
+X-ray transform for every geometry x model combination the library supports.
+They serve three roles:
+
+1. Oracle for the Pallas TPU kernels (``tests/test_kernels.py`` asserts
+   allclose against these across shape/dtype sweeps).
+2. CPU fallback backend (this is what actually executes in this container).
+3. Source of *matched adjoints*: backprojection is obtained with
+   ``jax.linear_transpose`` of the forward map, which is the exact transpose
+   by construction — the paper's matched-projector-pair requirement.
+
+Models:
+    * ``joseph`` — driving-axis linear interpolation (Joseph 1982).  Replaces
+      LEAP's Siddon fast path; Siddon's per-ray voxel-crossing enumeration is
+      GPU-warp idiomatic and has no efficient TPU analogue (see DESIGN.md).
+    * ``sf``     — Separable Footprint (Long et al. 2010), the accurate model.
+
+All functions map ``f (nx, ny, nz) -> sino (n_angles, n_rows, n_cols)`` and
+are linear in ``f``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.geometry import CTGeometry
+from repro.kernels.footprint import (cone_transaxial_footprint,
+                                     parallel_footprint, rect_overlap,
+                                     trapezoid_pixel_weight)
+
+_EPS = 1e-9
+
+
+# --------------------------------------------------------------------------- #
+# Small helpers
+# --------------------------------------------------------------------------- #
+def _lerp_take(arr, pos, axis):
+    """Linearly interpolate ``arr`` along ``axis`` at float positions ``pos``.
+
+    ``pos`` must have the same ndim as ``arr`` with size 1 along dims it
+    broadcasts over.  Out-of-range positions contribute zero."""
+    n = arr.shape[axis]
+    j = jnp.floor(pos)
+    w = pos - j
+    j = j.astype(jnp.int32)
+    valid0 = (j >= 0) & (j <= n - 1)
+    valid1 = (j + 1 >= 0) & (j + 1 <= n - 1)
+    j0 = jnp.clip(j, 0, n - 1)
+    j1 = jnp.clip(j + 1, 0, n - 1)
+    a0 = jnp.take_along_axis(arr, j0, axis=axis, mode="clip")
+    a1 = jnp.take_along_axis(arr, j1, axis=axis, mode="clip")
+    return a0 * jnp.where(valid0, 1.0 - w, 0.0) + a1 * jnp.where(valid1, w, 0.0)
+
+
+def _grids(geom: CTGeometry):
+    v = geom.vol
+    return (jnp.asarray(v.x_coords()), jnp.asarray(v.y_coords()),
+            jnp.asarray(v.z_coords()), jnp.asarray(geom.u_coords()),
+            jnp.asarray(geom.v_coords()))
+
+
+def _z_overlap_matrix(geom: CTGeometry) -> np.ndarray:
+    """(nz, nv) rectangle-overlap weights for parallel beam (axial separable)."""
+    v = geom.vol
+    zc = v.z_coords()[:, None]                       # (nz, 1)
+    ve = geom.v_coords()[None, :]                    # (1, nv) pixel centers
+    lo = np.maximum(zc - v.dz / 2, ve - geom.pixel_height / 2)
+    hi = np.minimum(zc + v.dz / 2, ve + geom.pixel_height / 2)
+    return (np.maximum(hi - lo, 0.0) / geom.pixel_height).astype(np.float32)
+
+
+# --------------------------------------------------------------------------- #
+# Parallel beam
+# --------------------------------------------------------------------------- #
+def fp_parallel_joseph(f, geom: CTGeometry):
+    xs, ys, zs, us, vs = _grids(geom)
+    v = geom.vol
+    nx, ny, nz = v.shape
+    nu = geom.n_cols
+
+    # axial: z(v) is angle-independent for parallel beam
+    zi = (vs - v.offset_z) / v.dz + (nz - 1) / 2.0   # (nv,)
+
+    def one_angle(_, ang):
+        c, s = jnp.cos(ang), jnp.sin(ang)
+        drive_x = jnp.abs(c) >= jnp.abs(s)
+        cs = jnp.where(drive_x, c, s)                # safe denominator
+        # --- drive along x: y = x tan + u / cos
+        ypos = xs[:, None] * (s / jnp.where(drive_x, c, 1.0)) \
+            + us[None, :] / jnp.where(drive_x, c, 1.0)          # (nx, nu)
+        yi = (ypos - v.offset_y) / v.dy + (ny - 1) / 2.0
+        gx = _lerp_take(f, jnp.broadcast_to(yi[:, :, None], (nx, nu, 1)), axis=1)
+        sx = jnp.sum(gx, axis=0) * (v.dx / jnp.maximum(jnp.abs(c), _EPS))  # (nu, nz)
+        # --- drive along y: x = y cot - u / sin
+        xpos = ys[:, None] * (c / jnp.where(drive_x, 1.0, s)) \
+            - us[None, :] / jnp.where(drive_x, 1.0, s)          # (ny, nu)
+        xi = (xpos - v.offset_x) / v.dx + (nx - 1) / 2.0
+        fT = jnp.swapaxes(f, 0, 1)                               # (ny, nx, nz)
+        gy = _lerp_take(fT, jnp.broadcast_to(xi[:, :, None], (ny, nu, 1)), axis=1)
+        sy = jnp.sum(gy, axis=0) * (v.dy / jnp.maximum(jnp.abs(s), _EPS))  # (nu, nz)
+        srow = jnp.where(drive_x, sx, sy)                        # (nu, nz)
+        # axial interpolation to detector rows
+        p = _lerp_take(srow, jnp.broadcast_to(zi[None, :], (nu, geom.n_rows)),
+                       axis=1)                                   # (nu, nv)
+        return 0, p.T                                            # (nv, nu)
+
+    _, sino = jax.lax.scan(one_angle, 0, jnp.asarray(geom.angles_array()))
+    return sino
+
+
+def fp_parallel_sf(f, geom: CTGeometry):
+    xs, ys, zs, us, vs = _grids(geom)
+    v = geom.vol
+    nx, ny, nz = v.shape
+    nu, nv = geom.n_cols, geom.n_rows
+    du = geom.pixel_width
+    Fz = jnp.asarray(_z_overlap_matrix(geom))                    # (nz, nv)
+    g = jnp.einsum("xyz,zv->xyv", f, Fz).reshape(nx * ny, nv)    # axial first
+    X = jnp.asarray(np.repeat(geom.vol.x_coords(), ny))
+    Y = jnp.asarray(np.tile(geom.vol.y_coords(), nx))
+    K = geom.max_footprint_cols()
+    edge0 = float(geom.u_coords()[0]) - du / 2.0
+
+    def one_angle(_, ang):
+        c, s = jnp.cos(ang), jnp.sin(ang)
+        uc = Y * c - X * s                                       # (nx*ny,)
+        t0, t1, t2, t3, h = parallel_footprint(uc, c, s, v.dx)
+        k0 = jnp.floor((t0 - edge0) / du + 1e-4).astype(jnp.int32)
+        acc = jnp.zeros((nu, nv), f.dtype)
+        for k in range(K):
+            iu = k0 + k
+            el = edge0 + iu.astype(f.dtype) * du
+            w = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
+            ok = (iu >= 0) & (iu < nu)
+            w = jnp.where(ok, w, 0.0)
+            acc = acc.at[jnp.clip(iu, 0, nu - 1)].add(w[:, None] * g)
+        return 0, acc.T                                          # (nv, nu)
+
+    _, sino = jax.lax.scan(one_angle, 0, jnp.asarray(geom.angles_array()))
+    return sino
+
+
+# --------------------------------------------------------------------------- #
+# Cone beam (axial, flat or curved detector)
+# --------------------------------------------------------------------------- #
+def fp_cone_joseph(f, geom: CTGeometry):
+    xs, ys, zs, us, vs = _grids(geom)
+    v = geom.vol
+    nx, ny, nz = v.shape
+    nu, nv = geom.n_cols, geom.n_rows
+    sod, sdd = geom.sod, geom.sdd
+    curved = geom.detector_type == "curved"
+
+    def one_angle(_, ang):
+        c, s = jnp.cos(ang), jnp.sin(ang)
+        sx, sy = sod * c, sod * s
+        if curved:
+            gam = us / sdd
+            dirx = sdd * (-c * jnp.cos(gam) - s * jnp.sin(gam))
+            diry = sdd * (-s * jnp.cos(gam) + c * jnp.sin(gam))
+        else:
+            dirx = -sdd * c - us * s
+            diry = -sdd * s + us * c
+        drive_x = jnp.abs(c) >= jnp.abs(s)
+
+        def project(fv, axis_coords, other_offset, other_d, n_other,
+                    src_a, src_b, dir_a, dir_b, da):
+            # drive along axis `a`; interpolate along axis `b` then z.
+            t = (axis_coords[:, None] - src_a) / jnp.where(
+                jnp.abs(dir_a) > _EPS, dir_a, _EPS)[None, :]      # (na_, nu)
+            bpos = src_b + t * dir_b[None, :]
+            bi = (bpos - other_offset) / other_d + (n_other - 1) / 2.0
+            A = _lerp_take(fv, jnp.broadcast_to(bi[:, :, None],
+                                                (fv.shape[0], nu, 1)), axis=1)
+            # axial: z = t * v   (source z = 0, dir_z = v)
+            zi_ = (t[:, :, None] * vs[None, None, :] - v.offset_z) / v.dz \
+                + (nz - 1) / 2.0                                  # (na_, nu, nv)
+            B = _lerp_take(A, zi_, axis=2)                        # (na_, nu, nv)
+            tin = (t > 0.0) & (t < 1.0)
+            B = B * tin[:, :, None]
+            # ray-length weight: (nu, nv)
+            wt = da * jnp.sqrt((dir_a ** 2 + dir_b ** 2)[:, None]
+                               + vs[None, :] ** 2) / jnp.maximum(
+                jnp.abs(dir_a), _EPS)[:, None]
+            return jnp.sum(B, axis=0) * wt                        # (nu, nv)
+
+        px = project(f, xs, v.offset_y, v.dy, ny, sx, sy, dirx, diry, v.dx)
+        py = project(jnp.swapaxes(f, 0, 1), ys, v.offset_x, v.dx, nx,
+                     sy, sx, diry, dirx, v.dy)
+        p = jnp.where(drive_x, px, py)
+        return 0, p.T                                             # (nv, nu)
+
+    _, sino = jax.lax.scan(one_angle, 0, jnp.asarray(geom.angles_array()))
+    return sino
+
+
+def fp_cone_sf(f, geom: CTGeometry):
+    if geom.detector_type != "flat":
+        raise NotImplementedError("SF cone supports flat detectors; "
+                                  "use joseph for curved")
+    xs, ys, zs, us, vs = _grids(geom)
+    v = geom.vol
+    nx, ny, nz = v.shape
+    nu, nv = geom.n_cols, geom.n_rows
+    du, dv = geom.pixel_width, geom.pixel_height
+    sod, sdd = geom.sod, geom.sdd
+    Ku = geom.max_footprint_cols()
+    Kv = geom.max_footprint_rows()
+    uedge0 = float(geom.u_coords()[0]) - du / 2.0
+    vedge0 = float(geom.v_coords()[0]) - dv / 2.0
+    X = jnp.asarray(np.repeat(v.x_coords(), ny))                 # (nxy,)
+    Y = jnp.asarray(np.tile(v.y_coords(), nx))
+    Z = jnp.asarray(v.z_coords())                                # (nz,)
+    fflat = f.reshape(nx * ny, nz)
+
+    def one_angle(_, ang):
+        c, s = jnp.cos(ang), jnp.sin(ang)
+        t0, t1, t2, t3, h, ell = cone_transaxial_footprint(X, Y, c, s, sod, sdd, v.dx)
+        # 3D obliquity at voxel center (per z)
+        rx, ry = X - sod * c, Y - sod * s
+        rt2 = rx * rx + ry * ry
+        obl = jnp.sqrt(1.0 + (Z[None, :] ** 2) / jnp.maximum(rt2[:, None], _EPS))
+        # axial rectangle: v in [sdd*(z-dz/2)/ell, sdd*(z+dz/2)/ell]
+        mag = sdd / jnp.maximum(ell, _EPS)                       # (nxy,)
+        vlo = (Z[None, :] - v.dz / 2) * mag[:, None]             # (nxy, nz)
+        vhi = (Z[None, :] + v.dz / 2) * mag[:, None]
+        # The +1e-4 nudge keeps the floor argument off exact bin
+        # boundaries: XLA CPU fusion may recompute the fused expression with
+        # FMA/reciprocal rewrites that differ from the materialized value by
+        # 1 ulp, flipping the floor and shifting the whole footprint window
+        # by one pixel (eager != jit; found by the Pallas cone kernel's
+        # oracle cross-check — see EXPERIMENTS.md).  At a boundary the
+        # overlap with the dropped bin is exactly zero, so the nudge only
+        # removes the ambiguity (error <= 1e-4 pixel).
+        ku0 = jnp.floor((t0 - uedge0) / du + 1e-4).astype(jnp.int32)
+        kv0 = jnp.floor((vlo - vedge0) / dv + 1e-4).astype(jnp.int32)
+        vals = fflat * obl                                       # (nxy, nz)
+        acc = jnp.zeros((nv * nu,), f.dtype)
+        for ku in range(Ku):
+            iu = ku0 + ku
+            el = uedge0 + iu.astype(f.dtype) * du
+            wu = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
+            oku = (iu >= 0) & (iu < nu)
+            wu = jnp.where(oku, wu, 0.0)
+            iuc = jnp.clip(iu, 0, nu - 1)                        # (nxy,)
+            for kv in range(Kv):
+                iv = kv0 + kv                                    # (nxy, nz)
+                elv = vedge0 + iv.astype(f.dtype) * dv
+                wv = rect_overlap(vlo, vhi, elv, elv + dv)
+                okv = (iv >= 0) & (iv < nv)
+                wv = jnp.where(okv, wv, 0.0)
+                ivc = jnp.clip(iv, 0, nv - 1)
+                idx = ivc * nu + iuc[:, None]                    # (nxy, nz)
+                acc = acc + jax.ops.segment_sum(
+                    (vals * wu[:, None] * wv).reshape(-1),
+                    idx.reshape(-1), num_segments=nv * nu)
+        return 0, acc.reshape(nv, nu)
+
+    _, sino = jax.lax.scan(one_angle, 0, jnp.asarray(geom.angles_array()))
+    return sino
+
+
+# --------------------------------------------------------------------------- #
+# Modular beam (arbitrary source/detector pose) — generic ray marching Joseph
+# --------------------------------------------------------------------------- #
+def fp_modular_joseph(f, geom: CTGeometry, oversample: float = 2.0):
+    v = geom.vol
+    nx, ny, nz = v.shape
+    nu, nv = geom.n_cols, geom.n_rows
+    us = jnp.asarray(geom.u_coords())
+    vs = jnp.asarray(geom.v_coords())
+    n_steps = int(np.ceil(oversample * np.sqrt(3) * max(v.shape)))
+    bmin = jnp.asarray([v.x_coords()[0] - v.dx / 2,
+                        v.y_coords()[0] - v.dy / 2,
+                        v.z_coords()[0] - v.dz / 2])
+    bmax = jnp.asarray([v.x_coords()[-1] + v.dx / 2,
+                        v.y_coords()[-1] + v.dy / 2,
+                        v.z_coords()[-1] + v.dz / 2])
+    off = jnp.asarray([v.offset_x, v.offset_y, v.offset_z])
+    dd = jnp.asarray([v.dx, v.dy, v.dz])
+    nn = jnp.asarray([nx, ny, nz])
+    fflat = f.reshape(-1)
+
+    def one_view(_, view):
+        src, ctr, eu, ev = view
+        d = (ctr[None, None, :] + us[None, :, None] * eu[None, None, :]
+             + vs[:, None, None] * ev[None, None, :])             # (nv, nu, 3)
+        dirv = d - src[None, None, :]
+        inv = 1.0 / jnp.where(jnp.abs(dirv) > _EPS, dirv, _EPS)
+        ta = (bmin[None, None, :] - src[None, None, :]) * inv
+        tb = (bmax[None, None, :] - src[None, None, :]) * inv
+        tmin = jnp.max(jnp.minimum(ta, tb), axis=-1)
+        tmax = jnp.min(jnp.maximum(ta, tb), axis=-1)
+        tmin = jnp.maximum(tmin, 0.0)
+        seg = jnp.maximum(tmax - tmin, 0.0)                       # (nv, nu)
+        dt = seg / n_steps
+        dlen = jnp.linalg.norm(dirv, axis=-1)                     # (nv, nu)
+
+        def step(acc, k):
+            t = tmin + (k + 0.5) * dt
+            pt = src[None, None, :] + t[:, :, None] * dirv        # (nv, nu, 3)
+            fi = (pt - off[None, None, :]) / dd + (nn - 1) / 2.0
+            j = jnp.floor(fi).astype(jnp.int32)
+            w = fi - j
+            val = jnp.zeros(t.shape, f.dtype)
+            for cx in (0, 1):
+                for cy in (0, 1):
+                    for cz in (0, 1):
+                        jj = j + jnp.asarray([cx, cy, cz])
+                        ok = jnp.all((jj >= 0) & (jj < nn), axis=-1)
+                        jjc = jnp.clip(jj, 0, nn - 1)
+                        flat = (jjc[..., 0] * ny + jjc[..., 1]) * nz + jjc[..., 2]
+                        ww = (jnp.where(cx, w[..., 0], 1 - w[..., 0])
+                              * jnp.where(cy, w[..., 1], 1 - w[..., 1])
+                              * jnp.where(cz, w[..., 2], 1 - w[..., 2]))
+                        val += jnp.take(fflat, flat.reshape(-1)).reshape(t.shape) \
+                            * ww * ok
+            return acc + val, 0
+
+        acc, _ = jax.lax.scan(step, jnp.zeros((nv, nu), f.dtype),
+                              jnp.arange(n_steps))
+        return 0, acc * dt * dlen
+
+    views = (jnp.asarray(geom.source_pos), jnp.asarray(geom.det_center),
+             jnp.asarray(geom.det_u), jnp.asarray(geom.det_v))
+    _, sino = jax.lax.scan(one_view, 0, views)
+    return sino
+
+
+# --------------------------------------------------------------------------- #
+# Dispatch + matched adjoints
+# --------------------------------------------------------------------------- #
+_FP_TABLE = {
+    ("parallel", "joseph"): fp_parallel_joseph,
+    ("parallel", "sf"): fp_parallel_sf,
+    ("cone", "joseph"): fp_cone_joseph,
+    ("cone", "sf"): fp_cone_sf,
+    ("modular", "joseph"): fp_modular_joseph,
+}
+
+
+def forward(f, geom: CTGeometry, model: str = "sf"):
+    key = (geom.geom_type, model)
+    if key not in _FP_TABLE:
+        if geom.geom_type == "modular":
+            key = ("modular", "joseph")   # modular supports joseph only
+        else:
+            raise NotImplementedError(f"no reference projector for {key}")
+    return _FP_TABLE[key](f, geom)
+
+
+def adjoint(sino, geom: CTGeometry, model: str = "sf"):
+    """Exact-transpose backprojection: A^T applied to ``sino``.
+
+    ``forward`` is linear in the volume, so its VJP *is* the exact adjoint —
+    the matched-pair property holds by construction."""
+    f0 = jnp.zeros(geom.vol.shape, sino.dtype)
+    _, vjp = jax.vjp(lambda x: forward(x, geom, model), f0)
+    return vjp(sino)[0]

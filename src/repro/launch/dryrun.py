@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell this lowers + compiles the real
+train/prefill/serve step against the production mesh with ShapeDtypeStruct
+inputs (zero allocation), then records:
+
+    * memory_analysis()  — proof the program fits per device;
+    * cost_analysis()    — HLO flops / bytes for the roofline;
+    * collective bytes   — parsed from the optimized HLO (see roofline.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import roofline, sharding, shapes as SH
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import model as MD
+from repro.optim import adamw, warmup_cosine
+
+
+def _abstract_opt_state(opt, abstract_params):
+    return jax.eval_shape(opt.init, abstract_params)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, cfg_overrides=None):
+    """Returns (lowered, in_shardings_info) for one cell."""
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SH.SHAPES[shape_name]
+    reason = SH.skip_reason(cfg, shape)
+    if reason:
+        return None, reason
+    ac = sharding.make_ac(mesh, cfg)
+    aparams = MD.abstract_params(cfg)
+    pshard = sharding.param_shardings(cfg, aparams, mesh)
+    ispec = SH.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = adamw(warmup_cosine(3e-4, 100, 10000), weight_decay=0.1)
+        aopt = _abstract_opt_state(opt, aparams)
+        # optimizer state inherits param shardings (ZeRO); step replicated
+        import os as _os
+        oshard = _opt_shardings(aopt, pshard, mesh,
+                                zero1=bool(_os.environ.get("REPRO_ZERO1")))
+        step = make_train_step(cfg, opt, ac)
+        bshard = sharding.batch_shardings(ispec, mesh, pure_dp=cfg.pure_dp)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(aparams, aopt, ispec)
+        return lowered, None
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, ac)
+        bshard = sharding.batch_shardings(ispec, mesh)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard))
+        with mesh:
+            lowered = jitted.lower(aparams, ispec)
+        return lowered, None
+
+    # decode
+    step = make_serve_step(cfg, ac)
+    cshard = sharding.cache_shardings(ispec["cache"], mesh)
+    tshard = sharding.batch_shardings({"tokens": ispec["tokens"]}, mesh)["tokens"]
+    jitted = jax.jit(step,
+                     in_shardings=(pshard, cshard, tshard, None),
+                     out_shardings=(None, None, cshard),
+                     donate_argnums=(1,))
+    with mesh:
+        lowered = jitted.lower(aparams, ispec["cache"], ispec["tokens"],
+                               ispec["position"])
+    return lowered, None
+
+
+def _opt_shardings(aopt, pshard, mesh, zero1: bool = False):
+    """AdamW state: mu/nu shaped like params -> same shardings (ZeRO falls
+    out of param sharding); with ``zero1`` the moments are instead fully
+    sharded over every mesh axis on their largest divisible dim (ZeRO-1:
+    replicated params + sharded optimizer state)."""
+    import numpy as _np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    if not zero1:
+        return type(aopt)(step=rep, mu=pshard, nu=pshard)
+    axes = tuple(mesh.axis_names)
+    n = int(_np.prod([mesh.shape[a] for a in axes]))
+
+    def shard_state(leaf_shard, leaf):
+        spec = [None] * len(leaf.shape)
+        for i in sorted(range(len(leaf.shape)), key=lambda i: -leaf.shape[i]):
+            if leaf.shape[i] % n == 0 and n > 1:
+                spec[i] = axes
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    mu = jax.tree.map(shard_state, pshard, aopt.mu)
+    return type(aopt)(step=rep, mu=mu, nu=mu)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             cfg_overrides=None, compute_roofline: bool = True,
+             mesh_shape=None):
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    lowered, reason = lower_cell(arch, shape_name, mesh, cfg_overrides)
+    if lowered is None:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_devices": len(mesh.devices.ravel()),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")
+                 if cost and k in cost} if isinstance(cost, dict) else {},
+    }
+    if compute_roofline:
+        rec["collectives"] = roofline.collective_bytes_from_hlo(
+            compiled.as_text())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SH.SHAPES) + [None])
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--moe-impl", type=str, default=None)
+    ap.add_argument("--remat", type=str, default=None)
+    ap.add_argument("--pure-dp", action="store_true")
+    ap.add_argument("--param-dtype", type=str, default=None)
+    ap.add_argument("--mesh-shape", type=str, default=None,
+                    help="override logical mesh, e.g. 64,4")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    args = ap.parse_args()
+
+    archs = configs.ARCHS if (args.all or args.arch is None) else [args.arch]
+    shps = list(SH.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    overrides = {}
+    if args.moe_impl:
+        overrides["moe"] = None  # placeholder; applied per-config below
+    if args.remat:
+        overrides["remat_policy"] = args.remat
+    if args.pure_dp:
+        overrides["pure_dp"] = True
+    if args.param_dtype:
+        overrides["param_dtype"] = args.param_dtype
+    if args.grad_accum is not None:
+        overrides["grad_accum"] = args.grad_accum
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shps:
+            for mp in meshes:
+                tag = f"{configs.canonical(arch)}-{shape}-{'multi' if mp else 'single'}"
+                out_path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(out_path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                try:
+                    ov = dict(overrides)
+                    ov.pop("moe", None)
+                    if args.moe_impl:
+                        cfg0 = configs.get(arch)
+                        if cfg0.moe is not None:
+                            ov["moe"] = dataclasses.replace(
+                                cfg0.moe, impl=args.moe_impl)
+                    ms = (tuple(int(x) for x in args.mesh_shape.split(","))
+                          if args.mesh_shape else None)
+                    rec = run_cell(arch, shape, mp, ov or None, mesh_shape=ms)
+                except Exception as e:  # noqa: BLE001 — record the failure
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[{rec['status']:7s}] {tag} "
+                      + (f"compile={rec.get('compile_s')}s" if rec["status"] == "ok"
+                         else rec.get("reason", rec.get("error", ""))[:120]))
+
+
+if __name__ == "__main__":
+    main()

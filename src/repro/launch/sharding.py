@@ -1,0 +1,203 @@
+"""GSPMD sharding rules for every parameter / activation / cache tensor.
+
+Policy (megatron-style TP on 'model' + ZeRO-3/FSDP on the data axes for
+large models):
+
+    column-parallel weights (wq/wk/wv/w1/w3/in_proj/dt_proj, lm head) shard
+    their *output* dim on 'model' and (if fsdp) their input dim on DP;
+    row-parallel weights (wo/w2/out_proj) the transpose;
+    MoE expert tensors shard the expert d_ff on 'model' (EP==TP axis);
+    embeddings shard the vocab on 'model';
+    optimizer state inherits the parameter specs (ZeRO falls out for free).
+
+Every rule is divisibility-guarded: if a dim doesn't divide by the mesh axis
+the entry degrades to None (replicated) — this is what lets one rule set
+serve 10 architectures with head counts from 1 to 96.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.models.config import ModelConfig
+
+# last-two-dims rule per leaf name: (in_rule, out_rule) where rule is
+# 'tp' | 'dp' | None  (dp = FSDP axes, only applied when fsdp enabled)
+_MATMUL_RULES = {
+    "wq": ("dp", "tp"), "wk": ("dp", "tp"), "wv": ("dp", "tp"),
+    "wo": ("tp", "dp"),
+    "w1": ("dp", "tp"), "w3": ("dp", "tp"), "w2": ("tp", "dp"),
+    "in_proj": ("dp", "tp"), "out_proj": ("tp", "dp"),
+    "x_proj": ("tp", None), "dt_proj": (None, "tp"),
+    "router": ("dp", None),
+    "embed": ("tp", "dp"),       # (V, d): vocab on model
+    "head": ("dp", "tp"),        # (d, V): vocab on model
+}
+_VECTOR_RULES = {
+    "conv_w": (None, "tp"),      # (K, di)
+    "conv_b": ("tp",),
+    "dt_bias": ("tp",),
+    "D": ("tp",),
+    "A_log": ("tp", None),       # (di, N)
+}
+
+
+def _axis_ok(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    size = int(np.prod([mesh.shape[a] for a in (
+        (axes,) if isinstance(axes, str) else axes)]))
+    return dim % size == 0 and size > 1
+
+
+def _resolve(rule, mesh: Mesh, dim: int, fsdp: bool):
+    if rule == "tp":
+        return "model" if _axis_ok(dim, mesh, "model") else None
+    if rule == "dp":
+        if not fsdp:
+            return None
+        dp = data_axes(mesh)
+        return dp if _axis_ok(dim, mesh, dp) else None
+    return None
+
+
+def param_pspec(path, shape, mesh: Mesh, fsdp: bool) -> P:
+    name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+    nd = len(shape)
+    if name in _MATMUL_RULES and nd >= 2:
+        rin, rout = _MATMUL_RULES[name]
+        spec = [None] * nd
+        spec[-2] = _resolve(rin, mesh, shape[-2], fsdp)
+        spec[-1] = _resolve(rout, mesh, shape[-1], fsdp)
+        return P(*spec)
+    if name in _VECTOR_RULES:
+        rules = _VECTOR_RULES[name]
+        spec = [None] * nd
+        for i, r in enumerate(rules):
+            dim_idx = nd - len(rules) + i
+            spec[dim_idx] = _resolve(r, mesh, shape[dim_idx], fsdp)
+        return P(*spec)
+    return P()   # norms, biases, scalars: replicated
+
+
+def _all_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def param_shardings(cfg: ModelConfig, abstract_params, mesh: Mesh,
+                    fsdp: Optional[bool] = None):
+    if fsdp is None:
+        fsdp = cfg.n_params() > 3e9 or cfg.pure_dp
+    if cfg.pure_dp:
+        # fold 'model' into data parallelism: params fully sharded (ZeRO-3)
+        # over every mesh axis on their largest divisible dim, no TP.
+        axes = _all_axes(mesh)
+
+        def g(path, leaf):
+            spec = [None] * len(leaf.shape)
+            if fsdp:
+                dims = sorted(range(len(leaf.shape)),
+                              key=lambda i: -leaf.shape[i])
+                for i in dims:
+                    if _axis_ok(leaf.shape[i], mesh, axes):
+                        spec[i] = axes
+                        break
+            return NamedSharding(mesh, P(*spec))
+
+        return jax.tree_util.tree_map_with_path(g, abstract_params)
+
+    def f(path, leaf):
+        return NamedSharding(mesh, param_pspec(path, leaf.shape, mesh, fsdp))
+    return jax.tree_util.tree_map_with_path(f, abstract_params)
+
+
+# ----------------------------- activations -------------------------------- #
+def make_ac(mesh: Mesh, cfg: ModelConfig):
+    """Activation-constraint callback threaded through the model: keeps the
+    batch dim on DP and (for logits) the vocab dim on 'model'."""
+    dp = _all_axes(mesh) if cfg.pure_dp else data_axes(mesh)
+
+    def ac(x, kind="act"):
+        if kind == "moe_gecd":
+            # grouped dispatch buffer (G, E, C, d): groups follow the batch
+            # onto DP; the expert FFN's d_ff stays sharded over 'model'.
+            spec = [None] * x.ndim
+            if _axis_ok(x.shape[0], mesh, dp):
+                spec[0] = dp
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+        if kind == "logits":
+            spec = [None] * x.ndim
+            if x.shape[0] % max(int(np.prod([mesh.shape[a] for a in dp])), 1) == 0:
+                spec[0] = dp
+            if not cfg.pure_dp and _axis_ok(x.shape[-1], mesh, "model"):
+                spec[-1] = "model"
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+        spec = [None] * x.ndim
+        if x.ndim >= 2 and x.shape[0] % max(
+                int(np.prod([mesh.shape[a] for a in dp])), 1) == 0 and x.shape[0] > 1:
+            spec[0] = dp
+        if cfg.seq_shard and x.ndim == 3 and _axis_ok(x.shape[1], mesh, "model"):
+            spec[1] = "model"     # sequence parallelism (hillclimb lever)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+    return ac
+
+
+# ----------------------------- batches / caches --------------------------- #
+def batch_pspec(shape, mesh: Mesh, batch_dim: int = 0, dp=None) -> P:
+    dp = dp or data_axes(mesh)
+    spec = [None] * len(shape)
+    if _axis_ok(shape[batch_dim], mesh, dp):
+        spec[batch_dim] = dp
+    return P(*spec)
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh, batch_dims: dict = None,
+                    pure_dp: bool = False):
+    batch_dims = batch_dims or {}
+    dp = _all_axes(mesh) if pure_dp else None
+    out = {}
+    for k, v in batch_specs.items():
+        bd = batch_dims.get(k, 1 if k == "positions" else 0)
+        if v.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = NamedSharding(mesh, batch_pspec(v.shape, mesh, bd, dp))
+    return out
+
+
+def cache_pspec(name: str, shape, mesh: Mesh) -> P:
+    """KV cache (L,B,S,KV,hd) / SSM caches (L,B,*,di,*)."""
+    dp = data_axes(mesh)
+    spec = [None] * len(shape)
+    if name in ("k", "v"):
+        if _axis_ok(shape[1], mesh, dp):
+            spec[1] = dp
+        elif _axis_ok(shape[2], mesh, dp):
+            spec[2] = dp          # long-context batch=1: shard sequence on DP
+        if _axis_ok(shape[3], mesh, "model"):
+            spec[3] = "model"
+        elif _axis_ok(shape[4], mesh, "model"):
+            spec[4] = "model"
+    elif name == "conv":
+        if _axis_ok(shape[1], mesh, dp):
+            spec[1] = dp
+        if _axis_ok(shape[3], mesh, "model"):
+            spec[3] = "model"
+    elif name == "ssm":
+        if _axis_ok(shape[1], mesh, dp):
+            spec[1] = dp
+        if _axis_ok(shape[2], mesh, "model"):
+            spec[2] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_specs: dict, mesh: Mesh):
+    return {k: NamedSharding(mesh, cache_pspec(k, v.shape, mesh))
+            for k, v in cache_specs.items()}

@@ -1,0 +1,90 @@
+"""jit-able training / serving step builders (shared by the real trainer,
+the smoke tests and the multi-pod dry-run)."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.optim.adamw import Optimizer, apply_updates, clip_by_global_norm
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, ac: Callable = None,
+                    grad_accum: int = None, clip_norm: float = 1.0,
+                    compress_fn: Callable = None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_accum > 1 splits the batch into microbatches scanned serially —
+    the standard memory/throughput trade (and a compute/comm overlap point:
+    the per-microbatch psum pipeline overlaps with the next microbatch's
+    backward under GSPMD)."""
+    ac = ac or (lambda x, kind=None: x)
+    if grad_accum is None:
+        grad_accum = cfg.grad_accum
+
+    def loss(params, batch):
+        return MD.loss_fn(cfg, params, batch, ac)
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            lv, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, _ = carry
+                lv, g = jax.value_and_grad(loss)(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b / grad_accum, acc, g)
+                return (acc, lv), None
+
+            def split(x, key):
+                ga = grad_accum
+                bd = 1 if key == "positions" else 0   # positions: (3, B, S)
+                nb = x.shape[bd] // ga
+                if bd == 0:
+                    return x.reshape((ga, nb) + x.shape[1:])
+                return x.reshape(x.shape[:1] + (ga, nb)
+                                 + x.shape[2:]).swapaxes(0, 1)
+
+            mbatch = {k: split(v, k) for k, v in batch.items()}
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, lv), _ = jax.lax.scan(micro, (zeros, jnp.asarray(0.0)),
+                                          mbatch)
+        if compress_fn is not None:
+            grads = compress_fn(grads)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": lv, "grad_norm": gnorm}
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, ac: Callable = None):
+    """Forward over the full prompt; returns last-position logits."""
+    ac = ac or (lambda x, kind=None: x)
+
+    def prefill(params, batch):
+        x, _ = MD.forward(cfg, params, batch["tokens"],
+                          batch.get("vision_embeds"), batch.get("positions"),
+                          ac)
+        from repro.models.layers import rms_norm  # final norm already applied
+        lg = MD.logits_fn(cfg, params, x[:, -1:])
+        return lg[:, 0]
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, ac: Callable = None,
+                    sample: str = "greedy"):
+    """One decode iteration: logits -> next token -> updated cache."""
+    ac = ac or (lambda x, kind=None: x)
+
+    def serve(params, cache, tokens, position):
+        lg, cache = MD.decode_step(cfg, params, cache, tokens, position, ac)
+        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return nxt, lg, cache
+
+    return serve

@@ -1,0 +1,255 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA attention (full,
+sliding-window, chunked-online-softmax for long sequences, and single-step
+decode against a KV cache), and the MLP variants used by the assigned archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: Tuple[int, ...],
+                theta: float = 10000.0):
+    """Qwen2-VL multimodal RoPE.  positions3: (3, ..., S) — temporal/h/w ids.
+    ``sections`` split the half-dim; each section rotates with its own ids."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    # section id per frequency
+    sec = []
+    for i, s in enumerate(sections):
+        sec += [i] * s
+    sec = jnp.asarray(sec)                                 # (hd/2,)
+    pos = jnp.take(positions3, sec, axis=0)                # (hd/2, ..., S)
+    pos = jnp.moveaxis(pos, 0, -1)                         # (..., S, hd/2)
+    ang = pos.astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention
+# --------------------------------------------------------------------------- #
+def _qkv(params, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, KV, hd)
+    v = (x @ params["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.rope == "standard":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,S,H,hd) k,v: (B,T,KV,hd); mask (S,T) bool (True=keep)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _causal_mask(S: int, T: int, window: Optional[int], is_global=None,
+                 offset: int = 0):
+    """(S, T) keep-mask.  ``is_global`` may be a *traced* per-layer bool
+    (hybrid stacks inside lax.scan): global layers ignore the window."""
+    qp = jnp.arange(S)[:, None] + offset
+    kp = jnp.arange(T)[None, :]
+    m = kp <= qp
+    if window is not None:
+        inw = kp > qp - window
+        if is_global is None:
+            m = m & inw
+        else:
+            m = m & (inw | is_global)
+    return m
+
+
+def attention_train(params, x, cfg: ModelConfig, positions,
+                    window: Optional[int] = None, is_global=None,
+                    chunk_q: int = 1024, chunk_kv: int = 1024):
+    """Full-sequence causal attention.  Uses a chunked online-softmax path
+    when S is large (memory O(S * chunk) instead of O(S^2))."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(params, x, cfg, positions)
+    if S <= 2048:
+        out = _sdpa(q, k, v, _causal_mask(S, S, window, is_global), cfg)
+    else:
+        out = _flash_attention(q, k, v, window, is_global, chunk_q, chunk_kv)
+    out = out.reshape(B, S, H * hd)
+    return out @ params["wo"]
+
+
+def _flash_attention(q, k, v, window, is_global, cq: int, ck: int):
+    """Chunked online-softmax attention (pure-jnp 'flash').  Off-diagonal
+    fully-masked blocks are still computed (XLA cannot skip them); the Pallas
+    flash kernel in kernels/flash.py removes that waste on TPU."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    cq = min(cq, S)
+    ck = min(ck, S)
+    nq, nk = S // cq, S // ck
+    qc = q.reshape(B, nq, cq, KV, G, hd)
+    kc = k.reshape(B, nk, ck, KV, hd)
+    vc = v.reshape(B, nk, ck, KV, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_block(qi, qb):               # qb: (B, cq, KV, G, hd)
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = kc[:, ki]             # (B, ck, KV, hd)
+            vb = vc[:, ki]
+            s = jnp.einsum("bskgh,btkh->bkgst", qb, kb).astype(jnp.float32)
+            s = s * scale
+            qp = qi * cq + jnp.arange(cq)[:, None]
+            kp = ki * ck + jnp.arange(ck)[None, :]
+            keep = kp <= qp
+            if window is not None:
+                inw = kp > qp - window
+                keep = keep & (inw if is_global is None else (inw | is_global))
+            s = jnp.where(keep[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkh->bkgsh", p.astype(qb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), 0
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out                     # (B, KV, G, cq, hd)
+
+    outs = jax.lax.map(lambda i: q_block(i, qc[:, i]), jnp.arange(nq))
+    # outs: (nq, B, KV, G, cq, hd) -> (B, S, H, hd)
+    outs = jnp.moveaxis(outs, 0, 3)    # (B, KV, G, nq, cq, hd)
+    B_, KV_, G_, nq_, cq_, hd_ = outs.shape
+    outs = outs.reshape(B, KV_, G_, S, hd_)
+    outs = jnp.moveaxis(outs, 3, 1)    # (B, S, KV, G, hd)
+    return outs.reshape(B, S, KV_ * G_, hd_).astype(q.dtype)
+
+
+def attention_decode(params, x, cfg: ModelConfig, cache_k, cache_v,
+                     position, window: Optional[int] = None, is_global=None):
+    """One-token decode.  cache_k/v: (B, S_max, KV, hd); position: (B,)
+    per-sequence write index (continuous batching: every slot may be at a
+    different depth).  Returns (out (B,1,d), new_k, new_v)."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    position = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (B,))
+    pos = position[:, None]                                     # (B, 1)
+    if cfg.rope == "mrope":
+        # decode: all three M-RoPE sections advance with the token index
+        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+    q, k, v = _qkv(params, x, cfg, pos)
+    S_max = cache_k.shape[1]
+    ring = window is not None and S_max == window and is_global is None
+    slot = jnp.mod(position, window) if ring else position      # (B,)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0])
+    kp = jnp.arange(S_max)[None, :]                             # (1, S)
+    if ring:
+        valid = kp < jnp.minimum(position + 1, window)[:, None]
+    else:
+        valid = kp <= position[:, None]
+        if window is not None:
+            inw = kp > (position[:, None] - window)
+            valid = valid & (inw if is_global is None else (inw | is_global))
+    q = q.reshape(B, 1, KV, H // KV, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", q, cache_k).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, cache_v).reshape(B, 1, H * hd)
+    return out @ params["wo"], cache_k, cache_v
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+def mlp_apply(params, x, kind: str):
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])) @ params["w2"]
+    if kind == "sq_relu":
+        return jnp.square(jax.nn.relu(x @ params["w1"])) @ params["w2"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ params["w1"]) @ params["w2"]
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter init helpers (used by model.init)
+# --------------------------------------------------------------------------- #
+def attn_param_shapes(cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    shapes = {"wq": (d, H * hd), "wk": (d, KV * hd), "wv": (d, KV * hd),
+              "wo": (H * hd, d)}
+    if cfg.qk_norm:
+        shapes["q_norm"] = (hd,)
+        shapes["k_norm"] = (hd,)
+    return shapes
+
+
+def mlp_param_shapes(cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {"w1": (d, ff), "w3": (d, ff), "w2": (ff, d)}
+    return {"w1": (d, ff), "w2": (ff, d)}

@@ -1,0 +1,143 @@
+"""Mamba-1 selective-state-space block (falcon-mamba / hymba SSM heads).
+
+Training path: chunked selective scan — within a chunk the recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ,   y_t = C_t . h_t + D x_t
+
+is evaluated with ``jax.lax.associative_scan`` (log-depth, TPU-friendly) and
+chunks are threaded serially with ``lax.scan``, keeping the materialized
+state tensor at (B, chunk, d_inner, N) instead of (B, S, d_inner, N) — the
+memory shape that makes 500k-token contexts feasible.
+
+Decode path: O(1) per token (the whole point of SSMs for long context).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def ssm_param_shapes(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm.d_state
+    R = cfg.ssm.resolved_dt_rank(d)
+    K = cfg.ssm.d_conv
+    return {"in_proj": (d, 2 * di), "conv_w": (K, di), "conv_b": (di,),
+            "x_proj": (di, R + 2 * N), "dt_proj": (R, di), "dt_bias": (di,),
+            "A_log": (di, N), "D": (di,), "out_proj": (di, d)}
+
+
+def _ssm_core(params, xc, dt, Bs, Cs, h0, cfg: ModelConfig):
+    """One chunk of the selective scan.
+    xc (B,C,di), dt (B,C,di), Bs/Cs (B,C,N), h0 (B,di,N)."""
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # (di, N)
+    Abar = jnp.exp(dt[..., None] * A)                        # (B,C,di,N)
+    Bx = (dt * xc)[..., None] * Bs[:, :, None, :]            # (B,C,di,N)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a2 * a1, b2 + a2 * b1
+
+    Acum, Hcum = jax.lax.associative_scan(combine, (Abar, Bx), axis=1)
+    h = Hcum + Acum * h0[:, None]                            # (B,C,di,N)
+    y = jnp.einsum("bcdn,bcn->bcd", h, Cs)
+    y = y + params["D"].astype(jnp.float32) * xc
+    return y, h[:, -1]
+
+
+def _dt_B_C(params, x, cfg: ModelConfig):
+    """x: (B,*,di) -> dt (B,*,di) f32, Bs/Cs (B,*,N) f32."""
+    N = cfg.ssm.d_state
+    R = cfg.ssm.resolved_dt_rank(cfg.d_model)
+    proj = x @ params["x_proj"]                              # (B,*,R+2N)
+    dt_r, Bs, Cs = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"]
+                         + params["dt_bias"]).astype(jnp.float32)
+    return dt, Bs.astype(jnp.float32), Cs.astype(jnp.float32)
+
+
+def mamba_train(params, x, cfg: ModelConfig, chunk: int = 512):
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    di = cfg.d_inner
+    K = cfg.ssm.d_conv
+    xz = x @ params["in_proj"]                               # (B,S,2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv along S
+    xpad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S] * params["conv_w"][i] for i in range(K))
+    xc = jax.nn.silu(xc + params["conv_b"])
+    dt, Bs, Cs = _dt_B_C(params, xc, cfg)
+    xcf = xc.astype(jnp.float32)
+
+    C = min(chunk, S)
+    nc = S // C
+    assert S % C == 0, f"seq {S} not divisible by ssm chunk {C}"
+    resh = lambda a: a.reshape(B, nc, C, *a.shape[2:]).swapaxes(0, 1)
+    xs_c, dt_c, B_c, C_c = map(resh, (xcf, dt, Bs, Cs))
+
+    def step(h, inp):
+        xi, di_, bi, ci = inp
+        y, h = _ssm_core(params, xi, di_, bi, ci, h, cfg)
+        return h, y
+
+    h0 = jnp.zeros((B, di, cfg.ssm.d_state), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (xs_c, dt_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def mamba_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
+    """One-token decode.  x: (B, 1, d); conv_state (B, K-1, di);
+    ssm_state (B, di, N).  Returns (y (B,1,d), conv_state, ssm_state)."""
+    B = x.shape[0]
+    K = cfg.ssm.d_conv
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                        # (B,1,di)
+    hist = jnp.concatenate([conv_state, xs], axis=1)         # (B,K,di)
+    xc = jnp.einsum("bkd,kd->bd", hist, params["conv_w"])[:, None]
+    xc = jax.nn.silu(xc + params["conv_b"])                  # (B,1,di)
+    dt, Bs, Cs = _dt_B_C(params, xc, cfg)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    Abar = jnp.exp(dt[..., None] * A)[:, 0]                  # (B,di,N)
+    Bx = ((dt * xc.astype(jnp.float32))[..., None]
+          * Bs[:, :, None, :])[:, 0]                         # (B,di,N)
+    ssm_state = Abar * ssm_state + Bx
+    y = jnp.einsum("bdn,bn->bd", ssm_state, Cs[:, 0])
+    y = y + params["D"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    return y @ params["out_proj"], hist[:, 1:], ssm_state
+
+
+def init_ssm_params(key, cfg: ModelConfig, dtype):
+    shapes = ssm_param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    p = {}
+    for (name, shp), k in zip(sorted(shapes.items()), keys):
+        if name == "A_log":
+            # S4D-real init: A = -(1..N)
+            a = jnp.broadcast_to(jnp.arange(1, shp[1] + 1, dtype=jnp.float32),
+                                 shp)
+            p[name] = jnp.log(a)
+        elif name == "D":
+            p[name] = jnp.ones(shp, dtype)
+        elif name == "dt_bias":
+            # inverse-softplus of dt in [1e-3, 1e-1]
+            dt = jnp.exp(jax.random.uniform(k, shp) *
+                         (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+            p[name] = jnp.log(jnp.expm1(dt)).astype(dtype)
+        elif name.endswith("_b") or name == "conv_b":
+            p[name] = jnp.zeros(shp, dtype)
+        else:
+            fan_in = shp[0] if len(shp) > 1 else shp[0]
+            p[name] = (jax.random.normal(k, shp, dtype)
+                       * (1.0 / math.sqrt(fan_in)))
+    return p

@@ -1,0 +1,343 @@
+"""Unified decoder LM covering every assigned architecture family.
+
+One parameter tree, one ``loss`` (training) and one ``decode_step`` (serving)
+entry point; the per-layer block is selected by ``cfg.family``:
+
+    dense / vlm / audio : [attn] + [mlp]
+    moe                 : [attn] + [moe]
+    ssm                 : [mamba]
+    hybrid (hymba)      : [attn || mamba  (parallel, mean-fused)] + [mlp]
+
+Layers are stacked (leading L axis) and executed with ``jax.lax.scan`` so the
+HLO stays one-layer-sized (compile time and remat both depend on this).
+Heterogeneous per-layer attention windows (hymba: every k-th layer global,
+rest sliding-window) are handled by running both masks' *metadata* through
+the scan as a per-layer boolean.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models.config import ModelConfig
+
+_Id = lambda x, kind=None: x
+
+
+# --------------------------------------------------------------------------- #
+# Parameter shapes / init
+# --------------------------------------------------------------------------- #
+def layer_param_shapes(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    shapes = {}
+    if cfg.uses_attention:
+        shapes["attn"] = dict(L.attn_param_shapes(cfg), ln=(d,))
+    if cfg.uses_ssm:
+        shapes["ssm"] = dict(M.ssm_param_shapes(cfg),
+                             **({} if cfg.family == "hybrid" else {}),
+                             ln=(d,))
+    if cfg.family == "moe":
+        shapes["moe"] = dict(MOE.moe_param_shapes(cfg), ln=(d,))
+    elif cfg.mlp != "none" and cfg.d_ff > 0:
+        shapes["mlp"] = dict(L.mlp_param_shapes(cfg), ln=(d,))
+    return shapes
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    lsh = jax.tree.map(lambda s: (cfg.n_layers,) + s, layer_param_shapes(cfg),
+                       is_leaf=lambda s: isinstance(s, tuple))
+    out = {"embed": (cfg.n_codebooks, V, d), "final_norm": (d,),
+           "layers": lsh}
+    if not cfg.tie_embeddings:
+        out["head"] = (cfg.n_codebooks, d, V)
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, dt),
+                        param_shapes(cfg),
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def init_params(cfg: ModelConfig, key):
+    """Real (smoke-test-scale) initialization."""
+    dt = jnp.dtype(cfg.param_dtype)
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten_with_path(
+        shapes, is_leaf=lambda s: isinstance(s, tuple))
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for (path, shp), k in zip(flat, keys):
+        name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+        if "ln" in name or "norm" in name or name in ("D",):
+            leaves.append(jnp.ones(shp, dt))
+        elif name == "A_log":
+            a = jnp.broadcast_to(
+                jnp.arange(1, shp[-1] + 1, dtype=jnp.float32), shp)
+            leaves.append(jnp.log(a).astype(jnp.float32))
+        elif name == "dt_bias":
+            dtv = jnp.exp(jax.random.uniform(k, shp)
+                          * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+            leaves.append(jnp.log(jnp.expm1(dtv)).astype(dt))
+        elif name.endswith("_b") or name == "bias":
+            leaves.append(jnp.zeros(shp, dt))
+        else:
+            fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+            leaves.append(jax.random.normal(k, shp, dt)
+                          / np.sqrt(max(fan_in, 1)))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------- #
+# Blocks
+# --------------------------------------------------------------------------- #
+def _layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer: True = global attention, False = sliding window."""
+    if cfg.sliding_window is None:
+        return np.ones((cfg.n_layers,), bool)
+    if cfg.global_attn_every <= 0:
+        return np.zeros((cfg.n_layers,), bool)
+    g = np.zeros((cfg.n_layers,), bool)
+    g[::cfg.global_attn_every] = True
+    g[-1] = True
+    return g
+
+
+_F32_LEAVES = {"A_log", "dt_bias", "D"}   # SSM dynamics stay fp32
+
+
+def _cast_layer(lp, dtype):
+    def f(path, a):
+        name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+        if name in _F32_LEAVES or not jnp.issubdtype(a.dtype, jnp.floating):
+            return a
+        return a.astype(dtype)
+    return jax.tree_util.tree_map_with_path(f, lp)
+
+
+def _block_train(cfg: ModelConfig, params, x, positions, is_global, ac):
+    params = _cast_layer(params, jnp.dtype(cfg.compute_dtype))
+    d = x.shape[-1]
+    if cfg.family == "ssm":
+        h = L.rms_norm(x, params["ssm"]["ln"], cfg.norm_eps)
+        x = x + ac(M.mamba_train(params["ssm"], h, cfg))
+        return x
+    window = cfg.sliding_window
+    if cfg.family == "hybrid":
+        h = L.rms_norm(x, params["attn"]["ln"], cfg.norm_eps)
+        a = L.attention_train(params["attn"], h, cfg, positions,
+                              window=window, is_global=is_global)
+        s = M.mamba_train(params["ssm"],
+                          L.rms_norm(x, params["ssm"]["ln"], cfg.norm_eps),
+                          cfg)
+        x = x + ac(0.5 * (a + s))
+    else:
+        h = L.rms_norm(x, params["attn"]["ln"], cfg.norm_eps)
+        x = x + ac(L.attention_train(params["attn"], h, cfg, positions,
+                                     window=window, is_global=is_global))
+    if "moe" in params:
+        h = L.rms_norm(x, params["moe"]["ln"], cfg.norm_eps)
+        y, aux = MOE.moe_apply(params["moe"], h, cfg, ac)
+        x = x + ac(y)
+    elif "mlp" in params:
+        h = L.rms_norm(x, params["mlp"]["ln"], cfg.norm_eps)
+        x = x + ac(L.mlp_apply(params["mlp"], h, cfg.mlp))
+    return x
+
+
+# --------------------------------------------------------------------------- #
+# Forward (training)
+# --------------------------------------------------------------------------- #
+def _embed(cfg: ModelConfig, params, tokens, vision_embeds=None):
+    """tokens: (B,S) or (B,nq,S) for multi-codebook."""
+    emb = params["embed"]
+    if cfg.n_codebooks > 1:
+        x = sum(jnp.take(emb[q], tokens[:, q], axis=0)
+                for q in range(cfg.n_codebooks))
+    else:
+        x = jnp.take(emb[0], tokens, axis=0)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    return x.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def _positions(cfg: ModelConfig, B, S):
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.rope == "mrope":
+        # text-only stub: all three sections share the temporal index
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def forward(cfg: ModelConfig, params, tokens, vision_embeds=None,
+            positions=None, ac: Callable = _Id):
+    x = _embed(cfg, params, tokens, vision_embeds)
+    B, S, d = x.shape
+    if positions is None:
+        positions = _positions(cfg, B, S)
+    x = ac(x, "act")
+    windows = _layer_windows(cfg)
+
+    def block(x, inp):
+        lp, is_global = inp
+        return _block_train(cfg, lp, x, positions, is_global, ac), None
+
+    if cfg.remat_policy != "none":
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        block = jax.checkpoint(block, policy=policy, prevent_cse=False)
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(block, x, (params["layers"], jnp.asarray(windows)))
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = block(x, (lp, jnp.asarray(windows[i])))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, ac
+
+
+def logits_fn(cfg: ModelConfig, params, x, codebook: int = 0):
+    head = (params["embed"].transpose(0, 2, 1) if cfg.tie_embeddings
+            else params["head"])
+    return x @ head[codebook].astype(x.dtype)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ac: Callable = _Id):
+    """batch: {'tokens': (B,S) or (B,nq,S), ['vision_embeds'], ['positions']}.
+    Next-token cross entropy (text positions only for VLM)."""
+    tokens = batch["tokens"]
+    ve = batch.get("vision_embeds")
+    x, _ = forward(cfg, params, tokens, ve, batch.get("positions"), ac)
+    n_vis = 0 if ve is None else ve.shape[1]
+    x = x[:, n_vis:]
+
+    def ce(logits, labels):
+        logits = ac(logits.astype(jnp.float32), "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        return (lse - gold).mean()
+
+    total = 0.0
+    if cfg.n_codebooks > 1:
+        for q in range(cfg.n_codebooks):
+            lg = logits_fn(cfg, params, x[:, :-1], q)
+            total += ce(lg, tokens[:, q, 1:])
+        total /= cfg.n_codebooks
+    else:
+        lg = logits_fn(cfg, params, x[:, :-1])
+        total = ce(lg, tokens[:, 1:])
+    return total
+
+
+# --------------------------------------------------------------------------- #
+# Decode (serving)
+# --------------------------------------------------------------------------- #
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Abstract KV/SSM cache spec.  Sliding-window layers use a ring buffer
+    of the window size (sub-quadratic memory for 500k contexts)."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+    Lc = cfg.n_layers
+    out = {}
+    if cfg.uses_attention:
+        s = seq_len
+        if cfg.sliding_window is not None and cfg.global_attn_every <= 0:
+            s = min(seq_len, cfg.sliding_window)
+        elif cfg.sliding_window is not None:
+            # hybrid stacks: scan needs homogeneous shapes; global layers
+            # dominate, so allocate full length for all attention layers
+            # unless every layer is windowed.
+            s = seq_len
+        out["k"] = jax.ShapeDtypeStruct((Lc, batch, s, cfg.n_kv_heads, hd), dt)
+        out["v"] = jax.ShapeDtypeStruct((Lc, batch, s, cfg.n_kv_heads, hd), dt)
+    if cfg.uses_ssm:
+        out["conv"] = jax.ShapeDtypeStruct(
+            (Lc, batch, cfg.ssm.d_conv - 1, cfg.d_inner), dt)
+        out["ssm"] = jax.ShapeDtypeStruct(
+            (Lc, batch, cfg.d_inner, cfg.ssm.d_state), jnp.float32)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, seq_len))
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, tokens, position,
+                ac: Callable = _Id):
+    """One decoding step for the whole stack.
+
+    tokens: (B,) or (B, nq); position: scalar or (B,) int32 write indices
+    (per-sequence: continuous-batching slots may be at different depths).
+    Returns (logits (B, V) or (B, nq, V), new_cache)."""
+    if cfg.n_codebooks > 1:
+        x = sum(jnp.take(params["embed"][q], tokens[:, q], axis=0)
+                for q in range(cfg.n_codebooks))[:, None]
+    else:
+        x = jnp.take(params["embed"][0], tokens, axis=0)[:, None]
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    B = x.shape[0]
+    position = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (B,))
+    windows = jnp.asarray(_layer_windows(cfg))
+
+    def block(x, inp):
+        lp, cache_l, is_global = inp
+        lp = _cast_layer(lp, jnp.dtype(cfg.compute_dtype))
+        new_cache = dict(cache_l)
+        if cfg.uses_attention and cfg.family != "ssm":
+            h = L.rms_norm(x, lp["attn"]["ln"], cfg.norm_eps)
+            a, nk, nv = L.attention_decode(
+                lp["attn"], h, cfg, cache_l["k"], cache_l["v"], position,
+                window=cfg.sliding_window,
+                is_global=(is_global if cfg.global_attn_every > 0 else None))
+            new_cache["k"], new_cache["v"] = nk, nv
+        if cfg.uses_ssm:
+            h = L.rms_norm(x, lp["ssm"]["ln"], cfg.norm_eps)
+            s, nconv, nssm = M.mamba_decode(lp["ssm"], h, cfg,
+                                            cache_l["conv"], cache_l["ssm"])
+            new_cache["conv"], new_cache["ssm"] = nconv, nssm
+        if cfg.family == "hybrid":
+            x = x + ac(0.5 * (a + s))
+        elif cfg.family == "ssm":
+            x = x + ac(s)
+        else:
+            x = x + ac(a)
+        if "moe" in lp:
+            h = L.rms_norm(x, lp["moe"]["ln"], cfg.norm_eps)
+            y, _ = MOE.moe_apply(lp["moe"], h, cfg, ac)
+            x = x + ac(y)
+        elif "mlp" in lp:
+            h = L.rms_norm(x, lp["mlp"]["ln"], cfg.norm_eps)
+            x = x + ac(L.mlp_apply(lp["mlp"], h, cfg.mlp))
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(block, x, (params["layers"], cache,
+                                               windows))
+    else:
+        caches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            cl = jax.tree.map(lambda a: a[i], cache)
+            x, nc = block(x, (lp, cl, windows[i]))
+            caches.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.n_codebooks > 1:
+        lg = jnp.stack([logits_fn(cfg, params, x[:, 0], q)
+                        for q in range(cfg.n_codebooks)], axis=1)
+    else:
+        lg = logits_fn(cfg, params, x[:, 0])
+    return lg, new_cache

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts layer (grok-1 / olmoe style: softmax router, top-k).
+
+Two implementations, selectable per config (hillclimb lever, see
+EXPERIMENTS.md §Perf):
+
+* ``dense``  — every expert runs on every token, combined with the (sparse)
+  gate weights.  Simple, deterministic, load-balance-free; wastes
+  n_experts/top_k x FLOPs.  This is the paper-agnostic baseline.
+* ``ragged`` — tokens are sorted by expert assignment and processed with
+  ``jax.lax.ragged_dot`` (grouped matmul); FLOPs are proportional to the
+  *active* parameter count.
+
+Expert weights are sharded over the 'model' mesh axis (expert-parallel =
+tensor-parallel axis); the router is replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def moe_param_shapes(cfg: ModelConfig):
+    d = cfg.d_model
+    m = cfg.moe
+    ff = m.expert_d_ff
+    shapes = {"router": (d, m.n_experts),
+              "w1": (m.n_experts, d, ff), "w2": (m.n_experts, ff, d)}
+    if cfg.mlp == "swiglu":
+        shapes["w3"] = (m.n_experts, d, ff)
+    return shapes
+
+
+def _expert_ffn(params, x, kind):
+    """x: (E, T, d) — per-expert batch."""
+    if kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("etd,edf->etf", x, params["w1"]))
+        h = h * jnp.einsum("etd,edf->etf", x, params["w3"])
+    elif kind == "sq_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("etd,edf->etf", x, params["w1"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("etd,edf->etf", x, params["w1"]))
+    return jnp.einsum("etf,efd->etd", h, params["w2"])
+
+
+def _router(params, x, cfg: ModelConfig):
+    """x: (T, d) -> gates (T, k), experts (T, k), probs (T, E)."""
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.moe.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, experts, probs
+
+
+def moe_dense(params, x, cfg: ModelConfig):
+    """x: (B, S, d).  All-experts path."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    gates, experts, probs = _router(params, xt, cfg)
+    E = cfg.moe.n_experts
+    xe = jnp.broadcast_to(xt[None], (E, B * S, d))
+    ye = _expert_ffn(params, xe, cfg.mlp)                 # (E, T, d)
+    # combine: one-hot over the small E axis only (T x k x E)
+    onehot = jax.nn.one_hot(experts, E, dtype=x.dtype)    # (T, k, E)
+    comb = jnp.einsum("tke,tk->te", onehot, gates.astype(x.dtype))
+    y = jnp.einsum("etd,te->td", ye, comb)
+    return y.reshape(B, S, d), _aux_loss(probs, experts, E)
+
+
+def moe_ragged(params, x, cfg: ModelConfig):
+    """Sorted/grouped-matmul path: FLOPs ~ active params only."""
+    B, S, d = x.shape
+    k = cfg.moe.top_k
+    E = cfg.moe.n_experts
+    T = B * S
+    xt = x.reshape(T, d)
+    gates, experts, probs = _router(params, xt, cfg)
+    flat_e = experts.reshape(T * k)                        # expert id per slot
+    flat_g = gates.reshape(T * k)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e)
+    xs = xt[flat_t[order]]                                 # (T*k, d) sorted
+    group_sizes = jnp.bincount(flat_e, length=E)
+    h = jax.lax.ragged_dot(xs, params["w1"], group_sizes)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(h) * jax.lax.ragged_dot(xs, params["w3"], group_sizes)
+    elif cfg.mlp == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    ys = jax.lax.ragged_dot(h, params["w2"], group_sizes)  # (T*k, d)
+    # un-sort and combine
+    y = jnp.zeros((T, d), x.dtype)
+    y = y.at[flat_t[order]].add(ys * flat_g[order][:, None].astype(x.dtype))
+    return y.reshape(B, S, d), _aux_loss(probs, experts, E)
+
+
+def _aux_loss(probs, experts, E):
+    """Load-balancing auxiliary loss (Switch-style)."""
+    onehot = jax.nn.one_hot(experts[..., 0], E, dtype=jnp.float32)
+    frac_tokens = onehot.mean(axis=0)
+    frac_probs = probs.mean(axis=0)
+    return E * jnp.sum(frac_tokens * frac_probs)
+
+
+def moe_gather(params, x, cfg: ModelConfig, ac=None):
+    """Grouped capacity-based gather dispatch (GShard-style, GSPMD-friendly).
+
+    Each *group* (= one sequence; groups shard over the data axes exactly
+    like the batch) dispatches its tokens to a per-group per-expert capacity
+    buffer (G, E, C, d); the expert FFN einsum then does ~k/E of the
+    dense-MoE FLOPs while the expert d_ff dim stays sharded over 'model'
+    (so any expert count works, incl. grok's E=8 on a 16-way axis).
+    Overflowing tokens are dropped (standard capacity semantics); the aux
+    loss keeps the router balanced so drops are rare.
+
+    Iteration history (EXPERIMENTS.md §Perf):
+      v1 sorted ragged_dot   — REFUTED: defeats GSPMD (6.7x flops).
+      v2 global (E, C, d)    — flops /2.4 but dispatch resharding exploded
+                               (gather crossed the data->model shard
+                               boundary: +100GB/dev collectives).
+      v3 grouped (this)      — dispatch is group-local; groups never leave
+                               their data shard."""
+    B, S, d = x.shape
+    m = cfg.moe
+    k, E = m.top_k, m.n_experts
+    cf = 1.25
+    C = max(4, int(round((k * S / E) * cf)))
+    gates, experts, probs = _router(params, x.reshape(B * S, d), cfg)
+    experts = experts.reshape(B, S, k)
+    gates = gates.reshape(B, S, k).astype(x.dtype)
+
+    flat_e = experts.reshape(B, S * k)
+    flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(S), k)[None], (B, S * k))
+    order = jnp.argsort(flat_e, axis=1)                    # per-group sort
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    rank = jnp.arange(S * k)[None] - jnp.take_along_axis(
+        starts, sorted_e, axis=1)
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)     # E*C = drop bin
+    src_tok = jnp.take_along_axis(flat_t, order, axis=1)   # (B, S*k)
+    gathered = jnp.take_along_axis(
+        x, src_tok[:, :, None], axis=1)                    # (B, S*k, d)
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, gathered)
+    gecd = buf[:, :-1].reshape(B, E, C, d)
+    if ac is not None:
+        gecd = ac(gecd, "moe_gecd")
+    ye = _expert_ffn_grouped(params, gecd, cfg.mlp)        # (B, E, C, d)
+    if ac is not None:
+        ye = ac(ye, "moe_gecd")
+    out = jnp.concatenate([ye.reshape(B, E * C, d),
+                           jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    contrib = jax.vmap(lambda o, s: o[s])(out, jnp.where(keep, slot, E * C))
+    sorted_g = jnp.take_along_axis(gates.reshape(B, S * k), order, axis=1)
+    contrib = contrib * sorted_g[:, :, None]
+    y = jnp.zeros((B, S, d), x.dtype)
+    y = jax.vmap(lambda yy, t, c: yy.at[t].add(c))(y, src_tok, contrib)
+    return y, _aux_loss(probs, experts.reshape(B * S, k), E)
+
+
+def _expert_ffn_grouped(params, gecd, kind):
+    """gecd: (G, E, C, d) -> (G, E, C, d); expert d_ff sharded over 'model'."""
+    if kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", gecd, params["w1"]))
+        h = h * jnp.einsum("gecd,edf->gecf", gecd, params["w3"])
+    elif kind == "sq_relu":
+        h = jnp.square(jax.nn.relu(
+            jnp.einsum("gecd,edf->gecf", gecd, params["w1"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", gecd, params["w1"]))
+    return jnp.einsum("gecf,efd->gecd", h, params["w2"])
+
+
+def moe_apply(params, x, cfg: ModelConfig, ac=None):
+    if cfg.moe.impl == "ragged":
+        return moe_ragged(params, x, cfg)
+    if cfg.moe.impl == "gather":
+        return moe_gather(params, x, cfg, ac)
+    return moe_dense(params, x, cfg)

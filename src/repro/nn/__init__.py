@@ -1,0 +1,1 @@
+from repro.nn import modules, unet, ctnet  # noqa: F401

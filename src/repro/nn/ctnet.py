@@ -1,0 +1,40 @@
+"""CT-Net-style sinogram completion network (Anirudh et al. 2018, simplified).
+
+Operates in the projection domain: takes the masked sinogram (missing views
+zeroed) plus the mask channel and predicts the completed sinogram.  Combined
+with the image-domain U-Net this reproduces the paper's §4 hybrid
+(CT-Net + U-Net) limited-angle model; both halves train end-to-end because
+the FBP/projector bridge between the domains is differentiable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import modules as m
+
+
+def ctnet_init(key, base: int = 32, depth: int = 4, dtype=jnp.float32):
+    keys = iter(jax.random.split(key, 2 * depth + 2))
+    layers = []
+    ch = 2  # sinogram + mask
+    for i in range(depth):
+        cl = base * (2 ** min(i, 2))
+        layers.append({
+            "c": m.conv2d_init(next(keys), ch, cl, dtype=dtype),
+            "n": m.group_norm_init(cl, dtype),
+        })
+        ch = cl
+    return {"layers": layers, "out": m.conv2d_init(next(keys), ch, 1, k=1,
+                                                   dtype=dtype)}
+
+
+def ctnet_apply(p, sino, mask):
+    """sino/mask: (B, n_angles, n_cols) -> completed sinogram (B, na, nu).
+    Measured views are passed through; only missing views are predicted."""
+    x = jnp.stack([sino, mask], axis=-1)                     # (B, na, nu, 2)
+    h = x
+    for lyr in p["layers"]:
+        h = m.silu(m.group_norm(lyr["n"], m.conv2d(lyr["c"], h)))
+    pred = m.conv2d(p["out"], h)[..., 0]
+    return mask * sino + (1.0 - mask) * pred

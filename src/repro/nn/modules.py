@@ -1,0 +1,76 @@
+"""Minimal functional NN layers (from scratch — no flax/haiku in this stack).
+
+Parameters are plain nested dicts of jnp arrays; every layer is an
+(init, apply) pair of pure functions.  NHWC layout throughout.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_init(key, in_ch: int, out_ch: int, k: int = 3, dtype=jnp.float32):
+    fan_in = in_ch * k * k
+    w = jax.random.normal(key, (k, k, in_ch, out_ch), dtype) * math.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((out_ch,), dtype)}
+
+
+def conv2d(params, x, stride: int = 1, padding: str = "SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["b"]
+
+
+def conv2d_transpose(params, x, stride: int = 2):
+    y = jax.lax.conv_transpose(
+        x, params["w"], strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["b"]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    s = scale if scale is not None else math.sqrt(1.0 / d_in)
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * s,
+            "b": jnp.zeros((d_out,), dtype)}
+
+
+def dense(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def group_norm_init(ch: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((ch,), dtype), "bias": jnp.zeros((ch,), dtype)}
+
+
+def group_norm(params, x, groups: int = 8, eps: float = 1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(n, h, w, c) * params["scale"] + params["bias"]
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def avg_pool(x, k: int = 2):
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, k, k, 1),
+                                 (1, k, k, 1), "VALID") / (k * k)
+
+
+def upsample_nearest(x, k: int = 2):
+    n, h, w, c = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, None, :], (n, h, k, w, k, c))
+    return x.reshape(n, h * k, w * k, c)
+
+
+def count_params(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))

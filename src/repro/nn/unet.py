@@ -1,0 +1,72 @@
+"""U-Net artifact-removal network (Han & Ye 2018 style) — the image-domain
+half of the paper's limited-angle experiment.  Input: ill-posed FBP slice;
+output: residual-corrected slice."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import modules as m
+
+
+def unet_init(key, base: int = 32, levels: int = 3, in_ch: int = 1,
+              out_ch: int = 1, dtype=jnp.float32):
+    keys = iter(jax.random.split(key, 64))
+    p = {"levels": []}
+    ch = in_ch
+    chans = [base * (2 ** l) for l in range(levels)]
+    for cl in chans:
+        p["levels"].append({
+            "c1": m.conv2d_init(next(keys), ch, cl, dtype=dtype),
+            "n1": m.group_norm_init(cl, dtype),
+            "c2": m.conv2d_init(next(keys), cl, cl, dtype=dtype),
+            "n2": m.group_norm_init(cl, dtype),
+        })
+        ch = cl
+    p["mid"] = {
+        "c1": m.conv2d_init(next(keys), ch, ch * 2, dtype=dtype),
+        "n1": m.group_norm_init(ch * 2, dtype),
+        "c2": m.conv2d_init(next(keys), ch * 2, ch * 2, dtype=dtype),
+        "n2": m.group_norm_init(ch * 2, dtype),
+    }
+    ch = ch * 2
+    p["ups"] = []
+    for cl in reversed(chans):
+        p["ups"].append({
+            "up": m.conv2d_init(next(keys), ch, cl, k=3, dtype=dtype),
+            "c1": m.conv2d_init(next(keys), cl * 2, cl, dtype=dtype),
+            "n1": m.group_norm_init(cl, dtype),
+            "c2": m.conv2d_init(next(keys), cl, cl, dtype=dtype),
+            "n2": m.group_norm_init(cl, dtype),
+        })
+        ch = cl
+    p["out"] = m.conv2d_init(next(keys), ch, out_ch, k=1, dtype=dtype)
+    # zero-init the output head: the net is the identity (residual) at init,
+    # which keeps training stable when image values are in physical 1/mm
+    # units (O(0.01)) while GroupNorm makes hidden activations O(1).
+    p["out"]["w"] = jnp.zeros_like(p["out"]["w"])
+    return p
+
+
+def _block(p, x):
+    x = m.silu(m.group_norm(p["n1"], m.conv2d(p["c1"], x)))
+    x = m.silu(m.group_norm(p["n2"], m.conv2d(p["c2"], x)))
+    return x
+
+
+def unet_apply(p, x):
+    """x: (B, H, W, C) -> (B, H, W, out_ch); residual connection on channel 0."""
+    skips = []
+    h = x
+    for lvl in p["levels"]:
+        h = _block(lvl, h)
+        skips.append(h)
+        h = m.avg_pool(h)
+    h = _block(p["mid"], h)
+    for up, skip in zip(p["ups"], reversed(skips)):
+        h = m.upsample_nearest(h)
+        h = m.conv2d(up["up"], h)
+        h = jnp.concatenate([h, skip], axis=-1)
+        h = _block(up, h)
+    out = m.conv2d(p["out"], h)
+    return out + x[..., :out.shape[-1]]

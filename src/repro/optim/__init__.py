@@ -1,0 +1,6 @@
+from repro.optim.adamw import adamw, sgd, clip_by_global_norm, apply_updates
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine)
+
+__all__ = ["adamw", "sgd", "clip_by_global_norm", "apply_updates",
+           "constant", "cosine_decay", "linear_warmup", "warmup_cosine"]

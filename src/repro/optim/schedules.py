@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure functions of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        frac = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return jnp.asarray(lr * frac, jnp.float32)
+    return f
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def f(step):
+        t = jnp.minimum(step / max(decay_steps, 1), 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * ((1 - alpha) * cos + alpha), jnp.float32)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  alpha: float = 0.1):
+    def f(step):
+        w = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * w * ((1 - alpha) * cos + alpha), jnp.float32)
+    return f

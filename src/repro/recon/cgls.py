@@ -1,0 +1,44 @@
+"""CGLS — conjugate gradient on the normal equations A^T A x = A^T y.
+
+Mathematically requires the backprojector to be the *exact* adjoint of the
+forward projector; with unmatched pairs CG diverges (Zeng & Gullberg 2000) —
+this is exactly the paper's argument for matched pairs.  Supports Tikhonov
+damping: min ||Ax - y||^2 + damp ||x||^2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projector import Projector
+
+
+def cgls(projector: Projector, y, n_iters: int = 30, x0=None,
+         damp: float = 0.0, mask=None):
+    A = (lambda x: projector(x) * mask) if mask is not None else projector
+    AT = (lambda r: projector.T(r * mask)) if mask is not None else projector.T
+
+    x = jnp.zeros(projector.vol_shape(), y.dtype) if x0 is None else x0
+    r = y - A(x)
+    if mask is not None:
+        r = r * mask
+    s = AT(r) - damp * x
+    p = s
+    gamma = jnp.vdot(s, s).real
+
+    def body(carry, _):
+        x, r, p, gamma = carry
+        q = A(p)
+        delta = jnp.vdot(q, q).real + damp * jnp.vdot(p, p).real
+        alpha = gamma / jnp.maximum(delta, 1e-30)
+        x = x + alpha * p
+        r = r - alpha * q
+        s = AT(r) - damp * x
+        gamma_new = jnp.vdot(s, s).real
+        beta = gamma_new / jnp.maximum(gamma, 1e-30)
+        p = s + beta * p
+        return (x, r, p, gamma_new), gamma_new
+
+    (x, _, _, _), hist = jax.lax.scan(body, (x, r, p, gamma), None,
+                                      length=n_iters)
+    return x, hist

@@ -1,0 +1,45 @@
+"""SIRT — Simultaneous Iterative Reconstruction Technique.
+
+x_{k+1} = x_k + lam * C (.) A^T [ R (.) (y - A x_k) ]
+
+with R = 1/row-sums(A), C = 1/col-sums(A) computed matrix-free by projecting
+constant images (the paper's memory-footprint point: the system matrix is
+never materialized).  Relies on the *matched* A/A^T pair for convergence
+stability over 1000+ iterations (paper §2.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projector import Projector
+
+_EPS = 1e-6
+
+
+def sirt(projector: Projector, y, n_iters: int = 50, x0=None, lam: float = 1.0,
+         nonneg: bool = True, mask=None):
+    """Reconstruct from sinogram ``y``.  ``mask`` (optional, same shape as y)
+    restricts the data term to measured rays (limited-angle / few-view)."""
+    geom = projector.geom
+    ones_v = jnp.ones(geom.vol.shape, y.dtype)
+    ones_s = jnp.ones(geom.sino_shape, y.dtype) if mask is None else mask
+    row = projector(ones_v)                       # A 1
+    col = projector.T(ones_s)                     # A^T 1 (masked)
+    rinv = jnp.where(row > _EPS, 1.0 / jnp.maximum(row, _EPS), 0.0)
+    cinv = jnp.where(col > _EPS, 1.0 / jnp.maximum(col, _EPS), 0.0)
+    if mask is not None:
+        rinv = rinv * mask
+    x = jnp.zeros(geom.vol.shape, y.dtype) if x0 is None else x0
+
+    def body(x, _):
+        r = y - projector(x)
+        if mask is not None:
+            r = r * mask
+        x = x + lam * cinv * projector.T(rinv * r)
+        if nonneg:
+            x = jnp.maximum(x, 0.0)
+        return x, 0
+
+    x, _ = jax.lax.scan(body, x, None, length=n_iters)
+    return x

@@ -1,0 +1,48 @@
+"""Gradient compression for the (slow, inter-pod) data-parallel axis.
+
+Error-feedback 1-bit sign compression (Seide et al. / Bernstein et al.):
+the update transmitted per leaf is  sign(g + e) * mean|g + e|  and the
+quantization residual e is carried to the next step.  Cuts pod-to-pod
+all-reduce bytes by ~16x (fp32->sign+scale); the residual keeps convergence
+(tested in tests/test_runtime.py on a quadratic problem).
+
+Usage: wraps the gradient tree *before* the optimizer; state (residuals)
+lives alongside optimizer state and is checkpointed with it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, residual) -> Tuple[dict, dict]:
+    """Returns (decompressed-equivalent grads, new residual).
+
+    The returned grads are what the receiving side reconstructs
+    (sign * scale); in a real deployment only (sign bits, scale) cross the
+    pod link — the arithmetic here is identical."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        scale = jnp.mean(jnp.abs(x))
+        q = jnp.sign(x) * scale
+        return q.astype(g.dtype), x - q
+
+    out = jax.tree.map(one, grads, residual)
+    q = jax.tree.map(lambda t: t[0], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    e = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return q, e
+
+
+def compressed_bytes(params) -> int:
+    """Bytes per step crossing the DP axis with 1-bit EF (sign bits + scale)."""
+    return sum(int(np.ceil(p.size / 8)) + 4 for p in jax.tree.leaves(params))
+

@@ -1,0 +1,15 @@
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    # keep smoke tests on the single real device; the dry-run sets its own
+    # XLA_FLAGS before importing jax (see launch/dryrun.py)
+    assert jax.device_count() >= 1

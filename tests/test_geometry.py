@@ -1,0 +1,59 @@
+import numpy as np
+import pytest
+
+from repro.core.geometry import (CTGeometry, VolumeGeometry, cone_beam,
+                                 from_config, modular_beam, parallel_beam)
+
+
+def test_volume_coords_centered():
+    v = VolumeGeometry(8, 8, 4, dx=2.0, dy=2.0, dz=1.0, offset_x=3.0)
+    assert np.isclose(v.x_coords().mean(), 3.0)
+    assert np.isclose(v.y_coords().mean(), 0.0)
+    assert np.isclose(np.diff(v.x_coords())[0], 2.0)
+
+
+def test_volume_validation():
+    with pytest.raises(ValueError):
+        VolumeGeometry(0, 8, 8)
+    with pytest.raises(ValueError):
+        VolumeGeometry(8, 8, 8, dx=1.0, dy=2.0)  # non-square in-plane
+
+
+def test_cone_validation():
+    v = VolumeGeometry(32, 32, 8)
+    with pytest.raises(ValueError):
+        cone_beam(10, 8, 48, v, sod=400.0, sdd=300.0)  # sdd < sod
+    with pytest.raises(ValueError):
+        cone_beam(10, 8, 48, v, sod=10.0, sdd=300.0)   # source inside volume
+
+
+def test_angles_subset_and_nonequispaced():
+    v = VolumeGeometry(16, 16, 2)
+    ang = np.sort(np.random.default_rng(0).uniform(0, np.pi, 12))
+    g = parallel_beam(12, 2, 24, v, angles=ang)
+    sub = g.subset([0, 3, 5])
+    assert sub.n_angles == 3
+    assert np.allclose(sub.angles_array(), ang[[0, 3, 5]], atol=1e-6)
+
+
+def test_from_config_roundtrip():
+    cfg = {"geom_type": "parallel", "n_angles": 6, "n_rows": 2, "n_cols": 24,
+           "volume": {"nx": 16, "ny": 16, "nz": 2}}
+    g = from_config(cfg)
+    assert g.sino_shape == (6, 2, 24)
+    assert g.key()  # hashable static key
+
+
+def test_modular_requires_vectors():
+    v = VolumeGeometry(16, 16, 2)
+    src = np.zeros((4, 3))
+    with pytest.raises(ValueError):
+        CTGeometry("modular", v, 4, 2, 24, angles=(0.0,) * 4, source_pos=src,
+                   det_center=None, det_u=None, det_v=None)
+
+
+def test_footprint_bounds_static():
+    v = VolumeGeometry(32, 32, 8)
+    g = cone_beam(10, 8, 48, v, sod=100.0, sdd=200.0)
+    assert g.max_footprint_cols() >= 2
+    assert g.max_footprint_rows() >= 2
