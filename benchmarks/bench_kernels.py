@@ -1,7 +1,16 @@
 """Kernel microbenchmark: Pallas (interpret on CPU) vs pure-jnp oracle at
 matched shapes, plus the jnp backend at production-ish 2D sizes.  On real
 TPU the pallas path is the production backend; interpret-mode timing is a
-correctness artifact, not a perf number — flagged in `derived`."""
+correctness artifact, not a perf number — flagged in `derived`.
+
+From the lane-packing PR onward this also records, on every runner:
+
+* backprojection and forward+VJP (gradient) timings,
+* the paper's flagship batched 2D training shape (nz=1, n_rows=1, batch>=8)
+  on BOTH the seed per-sample vmap path and the lane-packed batched path,
+  sweeping view-block configs — so the lane-packing win (up to 128x lane
+  occupancy) is tracked in BENCH_*.json across PRs.
+"""
 from __future__ import annotations
 
 import time
@@ -12,7 +21,8 @@ import numpy as np
 
 from repro.core import VolumeGeometry, parallel_beam
 from repro.kernels import ref
-from repro.kernels.fp_par import fp_parallel_sf_pallas
+from repro.kernels.fp_par import bp_parallel_sf_pallas, fp_parallel_sf_pallas
+from repro.kernels.tune import KernelConfig
 
 
 def _t(fn, *a, reps=2):
@@ -26,20 +36,87 @@ def _t(fn, *a, reps=2):
 
 
 def run(csv_rows: list):
-    vol = VolumeGeometry(64, 64, 8)
-    g = parallel_beam(24, 8, 96, vol)
+    on_tpu = jax.default_backend() == "tpu"
+    mode = "tpu" if on_tpu else "interpret-mode(correctness-only)"
+    reps = 5 if on_tpu else 1
+
+    # ---- 3D kernel shape: fp / bp / grad, oracle vs pallas --------------- #
+    # Interpret mode executes one Python step per grid point — use a small
+    # grid off-TPU so the suite stays inside the harness budget.
+    if on_tpu:
+        vol = VolumeGeometry(64, 64, 8)
+        g = parallel_beam(24, 8, 96, vol)
+    else:
+        vol = VolumeGeometry(32, 32, 4)
+        g = parallel_beam(12, 4, 48, vol)
     f = jnp.asarray(np.random.default_rng(0).normal(
         size=vol.shape).astype(np.float32))
+    y = jnp.asarray(np.random.default_rng(1).normal(
+        size=g.sino_shape).astype(np.float32))
     t_ref = _t(jax.jit(lambda x: ref.forward(x, g, "sf")), f)
-    csv_rows.append(("kernel/fp_par_sf/jnp_oracle", t_ref * 1e6,
-                     "cpu-jit"))
-    t_pal = _t(lambda x: fp_parallel_sf_pallas(x, g), f, reps=1)
-    csv_rows.append(("kernel/fp_par_sf/pallas", t_pal * 1e6,
-                     "interpret-mode(correctness-only)"))
-    # 2D production-ish slice (the paper's 512^2 limited-angle setting)
-    vol2 = VolumeGeometry(256, 256, 1)
-    g2 = parallel_beam(180, 1, 384, vol2)
-    f2 = jnp.asarray(np.random.default_rng(1).normal(
-        size=vol2.shape).astype(np.float32))
-    t2 = _t(jax.jit(lambda x: ref.forward(x, g2, "sf")), f2)
+    csv_rows.append(("kernel/fp_par_sf/jnp_oracle", t_ref * 1e6, "cpu-jit"))
+    t_bp_ref = _t(jax.jit(lambda p: ref.adjoint(p, g, "sf")), y)
+    csv_rows.append(("kernel/bp_par_sf/jnp_oracle", t_bp_ref * 1e6, "cpu-jit"))
+    t_pal = _t(lambda x: fp_parallel_sf_pallas(x, g), f, reps=reps)
+    csv_rows.append(("kernel/fp_par_sf/pallas", t_pal * 1e6, mode))
+    t_bp = _t(lambda p: bp_parallel_sf_pallas(p, g), y, reps=reps)
+    csv_rows.append(("kernel/bp_par_sf/pallas", t_bp * 1e6, mode))
+
+    # view-block sweep (the ba knob the autotuner searches)
+    for ba in (1, 4):
+        t = _t(lambda x: fp_parallel_sf_pallas(
+            x, g, config=KernelConfig(ba=ba)), f, reps=reps)
+        csv_rows.append((f"kernel/fp_par_sf/pallas_ba{ba}", t * 1e6, mode))
+
+    # ---- batched 2D training shape: seed vmap path vs lane packing ------- #
+    # The paper's limited-angle DL regime: thin-z volume, single detector
+    # row, per-step training batch.  This is where lane packing turns
+    # 1/128 lane occupancy into full tiles.
+    B = 8
+    if on_tpu:
+        vol2 = VolumeGeometry(128, 128, 1)
+        g2 = parallel_beam(90, 1, 192, vol2)
+    else:
+        vol2 = VolumeGeometry(32, 32, 1)
+        g2 = parallel_beam(12, 1, 48, vol2)
+    fb = jnp.asarray(np.random.default_rng(2).normal(
+        size=(B,) + vol2.shape).astype(np.float32))
+    yb = jnp.asarray(np.random.default_rng(3).normal(
+        size=(B,) + g2.sino_shape).astype(np.float32))
+
+    t_vmap = _t(lambda x: jax.vmap(
+        lambda s: fp_parallel_sf_pallas(s, g2))(x), fb, reps=reps)
+    csv_rows.append((f"kernel/fp2d_b{B}/pallas_vmap_seed", t_vmap * 1e6, mode))
+    t_pack = _t(lambda x: fp_parallel_sf_pallas(x, g2), fb, reps=reps)
+    csv_rows.append((f"kernel/fp2d_b{B}/pallas_lane_packed", t_pack * 1e6,
+                     f"{mode};speedup_vs_vmap={t_vmap / max(t_pack, 1e-12):.2f}x"))
+
+    # forward + VJP (one training step's projector work), both batch paths.
+    # Gradients route through the registered matched pair (custom_vjp), so
+    # the VJP is the backprojection kernel, not autodiff through pallas_call.
+    from repro.kernels import ops
+
+    def loss_ops(x):
+        p = ops.forward_project(x, g2, "sf", backend="pallas")
+        return 0.5 * jnp.sum((p - yb) ** 2)
+
+    t_grad_vmap = _t(lambda x: jax.grad(
+        lambda z: 0.5 * jnp.sum(
+            (jax.vmap(lambda s: ops.forward_project(
+                s, g2, "sf", backend="pallas"))(z) - yb) ** 2))(x),
+        fb, reps=reps)
+    csv_rows.append((f"kernel/grad2d_b{B}/pallas_vmap_seed",
+                     t_grad_vmap * 1e6, mode))
+    t_grad_pack = _t(lambda x: jax.grad(loss_ops)(x), fb, reps=reps)
+    csv_rows.append((f"kernel/grad2d_b{B}/pallas_lane_packed",
+                     t_grad_pack * 1e6,
+                     f"{mode};speedup_vs_vmap="
+                     f"{t_grad_vmap / max(t_grad_pack, 1e-12):.2f}x"))
+
+    # ---- 2D production-ish slice (the paper's 512^2 limited-angle) ------- #
+    vol3 = VolumeGeometry(256, 256, 1)
+    g3 = parallel_beam(180, 1, 384, vol3)
+    f3 = jnp.asarray(np.random.default_rng(4).normal(
+        size=vol3.shape).astype(np.float32))
+    t2 = _t(jax.jit(lambda x: ref.forward(x, g3, "sf")), f3)
     csv_rows.append(("kernel/fp_256x256x180", t2 * 1e6, "cpu-jit"))

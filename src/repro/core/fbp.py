@@ -141,7 +141,18 @@ def fbp_cone(sino, geom: CTGeometry, filter_name: str = "ramp"):
 
 
 def fbp(sino, geom: CTGeometry, model: str = "sf", backend: str = "auto",
-        filter_name: str = "ramp"):
+        filter_name: str = "ramp", config=None):
+    """Analytic reconstruction.
+
+    ``config`` (a :class:`repro.kernels.tune.KernelConfig`) is accepted for
+    API uniformity with the projector ops and reserved for a kernelized
+    backprojector; the current interpolation backprojectors are pure jnp
+    and take no tile sizes.
+    """
+    if config is not None:
+        from repro.kernels.tune import KernelConfig
+        if not isinstance(config, KernelConfig):
+            raise TypeError(f"config must be a KernelConfig, got {config!r}")
     if geom.geom_type == "parallel":
         return fbp_parallel(sino, geom, filter_name)
     if geom.geom_type == "cone":

@@ -15,31 +15,40 @@ method via the matched custom_vjp pairs in ``repro.kernels.ops``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.core.fbp import fbp as _fbp
 from repro.core.geometry import CTGeometry
 from repro.kernels import ops
+from repro.kernels.tune import KernelConfig
 
 
 class Projector:
     def __init__(self, geom: CTGeometry, model: str = "sf",
-                 backend: str = "auto"):
+                 backend: str = "auto",
+                 config: Optional[KernelConfig] = None):
         if model not in ("sf", "joseph"):
             raise ValueError(f"unknown projector model {model!r}")
+        if config is not None and not isinstance(config, KernelConfig):
+            raise TypeError(f"config must be a KernelConfig, got {config!r}")
         self.geom = geom
         self.model = model if geom.geom_type != "modular" else "joseph"
         self.backend = backend
+        self.config = config
 
     # -- linear ops -------------------------------------------------------- #
     def __call__(self, volume):
-        return ops.forward_project(volume, self.geom, self.model, self.backend)
+        return ops.forward_project(volume, self.geom, self.model,
+                                   self.backend, self.config)
 
     forward = __call__
 
     def backproject(self, sino):
-        return ops.back_project(sino, self.geom, self.model, self.backend)
+        return ops.back_project(sino, self.geom, self.model, self.backend,
+                                self.config)
 
     @property
     def T(self):
@@ -47,12 +56,10 @@ class Projector:
 
     # -- analytic reconstruction ------------------------------------------ #
     def fbp(self, sino, filter_name: str = "ramp"):
-        from repro.core.fbp import fbp as _fbp
-        from repro.kernels.ops import _batched
-        import functools
         op = functools.partial(_fbp, geom=self.geom, model=self.model,
-                               backend=self.backend, filter_name=filter_name)
-        return _batched(op, sino, 3)
+                               backend=self.backend, filter_name=filter_name,
+                               config=self.config)
+        return ops._batched(op, sino, 3)
 
     # -- DL integration ---------------------------------------------------- #
     def data_consistency(self, volume, measured, mask=None):

@@ -3,7 +3,8 @@
 Importing this package registers every available Pallas kernel with the
 dispatch table in ``repro.kernels.ops``.
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, ref, tune  # noqa: F401
+from repro.kernels.tune import KernelConfig  # noqa: F401
 
 
 def _register_all():

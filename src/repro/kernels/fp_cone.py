@@ -17,12 +17,21 @@ specifics:
 
 Backprojection pairs with the jnp adjoint (exact transpose of the same math
 — ``ref.adjoint``), so the registered pair stays matched.
+
+Batching: the per-lane axial resample depends on the actual detector-row
+coordinate of each lane, so batch cannot be packed into the 128-wide axis the
+way the parallel kernel does.  Instead a leading batch dimension is folded
+into the *view* grid axis — the per-view parameter table is tiled per sample
+and the volume input is stacked along the gathered axis, so one
+``pallas_call`` covers the whole batch (no vmap over the kernel).
+
+Tile sizes come from :mod:`repro.kernels.tune` (``KernelConfig``).
 """
 from __future__ import annotations
 
 import functools
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,11 +40,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.geometry import CTGeometry
-from repro.kernels import ref
+from repro.kernels import ref, tune
 from repro.kernels.footprint import trapezoid_pixel_weight
-
-BU = 8
-BV = 128
 
 
 def _interpret() -> bool:
@@ -99,7 +105,7 @@ def _fp_cone_kernel(params_ref,        # SMEM (n_views, 20)
                     *, W: int, NZW: int, u0: float, du: float,
                     v0: float, dv: float, z0c: float, dz: float,
                     sdd: float, dxv: float, ng: int, nz: int,
-                    bu: int, bv: int):
+                    bu: int, bv: int, nav: int):
     a = pl.program_id(0)
     ub = pl.program_id(1)
     vb = pl.program_id(2)
@@ -109,7 +115,10 @@ def _fp_cone_kernel(params_ref,        # SMEM (n_views, 20)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    P = [params_ref[a, i] for i in range(20)]
+    # Batched runs fold the batch into the view grid axis; the params table
+    # stays (n_views, 20) in SMEM and the view index wraps per sample.
+    av = jax.lax.rem(a, nav)
+    P = [params_ref[av, i] for i in range(20)]
     (Aq, Bq, Cq, Al, Bl, Cl, Arx, Brx, Crx, Ary, Bry, Cry) = P[:12]
     lif = li.astype(jnp.float32)
     u_first = u0 + (ub * bu) * du
@@ -188,14 +197,19 @@ def _fp_cone_kernel(params_ref,        # SMEM (n_views, 20)
     out_ref[0] += acc.astype(out_ref.dtype)
 
 
-def _run_group(f, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
+def _run_group(fb, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
                bu: int, bv: int):
+    """fb: (B, nx, ny, nz) batch of volumes.  The batch is folded into the
+    view grid axis: grid step ``a`` covers view ``a % na`` of sample
+    ``a // na`` (volumes stacked along the gathered axis; the SMEM params
+    table is *not* duplicated per sample).  Returns (B, na_group, NUp, NVp)."""
     if params.shape[0] == 0:
         return None
     vol = geom.vol
     if not gathered_x:
-        f = jnp.swapaxes(f, 0, 1)
-    ng, nl, nz = f.shape
+        fb = jnp.swapaxes(fb, 1, 2)
+    B, ng, nl, nz = fb.shape
+    fs = fb.reshape(B * ng, nl, nz)
     na = params.shape[0]
     nup = _round_up(geom.n_cols, bu)
     nvp = _round_up(geom.n_rows, bv)
@@ -212,46 +226,66 @@ def _run_group(f, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
         u0=float(geom.u_coords()[0]), du=geom.pixel_width,
         v0=float(geom.v_coords()[0]), dv=geom.pixel_height,
         z0c=float(vol.z_coords()[0]), dz=vol.dz,
-        sdd=geom.sdd, dxv=vol.dx, ng=ng, nz=nz, bu=bu, bv=bv)
+        sdd=geom.sdd, dxv=vol.dx, ng=ng, nz=nz, bu=bu, bv=bv, nav=na)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(na, nup // bu, nvp // bv, nl),
+            grid=(B * na, nup // bu, nvp // bv, nl),
             in_specs=[pl.BlockSpec((ng, 1, nz),
-                                   lambda a, ub, vb, l, *_: (0, l, 0))],
+                                   lambda a, ub, vb, l, *_: (a // na, l, 0))],
             out_specs=pl.BlockSpec((1, bu, bv),
                                    lambda a, ub, vb, l, *_: (a, ub, vb)),
         ),
-        out_shape=jax.ShapeDtypeStruct((na, nup, nvp), f.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * na, nup, nvp), fs.dtype),
         interpret=_interpret(),
-    )(jnp.asarray(params), f)
-    return out
+    )(jnp.asarray(params), fs)
+    return out.reshape(B, na, nup, nvp)
 
 
-def fp_cone_sf_pallas(f, geom: CTGeometry, bu: int = BU, bv: int = BV):
-    """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols).  Flat detector."""
+def fp_cone_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
+                      bv: Optional[int] = None,
+                      config: Optional[tune.KernelConfig] = None):
+    """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or batched
+    f: (batch, nx, ny, nz) -> (batch, ...).  Flat detector."""
     assert geom.geom_type == "cone" and geom.detector_type == "flat"
+    if f.ndim not in (3, 4):
+        raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
+    batched = f.ndim == 4
+    fb = f if batched else f[None]
+    cfg = tune.resolve_config(geom, fb.shape[0], config, dtype=f.dtype,
+                              bu=bu, bv=bv)
     px, py, order = _view_params_cone(geom)
     outs = []
-    o1 = _run_group(f, px, geom, True, bu, bv)
+    o1 = _run_group(fb, px, geom, True, cfg.bu, cfg.bv)
     if o1 is not None:
         outs.append(o1)
-    o2 = _run_group(f, py, geom, False, bu, bv)
+    o2 = _run_group(fb, py, geom, False, cfg.bu, cfg.bv)
     if o2 is not None:
         outs.append(o2)
-    out = jnp.concatenate(outs, axis=0)
-    out = out[:, :geom.n_cols, :geom.n_rows]
+    out = jnp.concatenate(outs, axis=1)                    # (B, na, NUp, NVp)
+    out = out[:, :, :geom.n_cols, :geom.n_rows]
     inv = np.argsort(order)
-    return jnp.swapaxes(out[inv], 1, 2)
+    out = jnp.swapaxes(out[:, inv], 2, 3)                  # (B, na, nv, nu)
+    return out if batched else out[0]
 
 
-def bp_cone_sf_ref(sino, geom: CTGeometry):
+def bp_cone_sf_ref(sino, geom: CTGeometry,
+                   config: Optional[tune.KernelConfig] = None):
     """Matched adjoint via the jnp oracle (exact transpose of the same
-    footprint math; the Pallas bp kernel mirrors fp and is future work)."""
+    footprint math; the Pallas bp kernel mirrors fp and is future work —
+    see ROADMAP.md)."""
     return ref.adjoint(sino, geom, "sf")
+
+
+def bp_cone_sf_ref_batched(sino, geom: CTGeometry,
+                           config: Optional[tune.KernelConfig] = None):
+    """Batched matched adjoint (vmap over the jnp oracle)."""
+    return jax.vmap(lambda q: ref.adjoint(q, geom, "sf"))(sino)
 
 
 def register():
     from repro.kernels import ops
-    ops.register_kernel("cone", "sf", fp_cone_sf_pallas, bp_cone_sf_ref)
+    ops.register_kernel("cone", "sf", fp_cone_sf_pallas, bp_cone_sf_ref,
+                        fp_batched=fp_cone_sf_pallas,
+                        bp_batched=bp_cone_sf_ref_batched)

@@ -2,9 +2,9 @@
 
 TPU-native design (see DESIGN.md §2).  LEAP's CUDA kernels are
 thread-per-output with 3D texture gathers; here each Pallas program computes a
-``(BU detector columns) x (BV detector rows)`` output tile for one view by
-looping over the volume's *loop axis* and, per step, contracting a
-``(BU, W)`` footprint-weight tile against a ``(W, BV)`` volume window on the
+``(bu detector columns) x (bv lanes)`` output tile for a block of ``ba`` views
+by looping over the volume's *loop axis* and, per step, contracting a
+``(bu, W)`` footprint-weight tile against a ``(W, bv)`` volume window on the
 MXU.  The footprint weights are exact SF trapezoid-pixel integrals; the
 ``W``-wide window along the *gathered axis* is addressed with a scalar
 ``pl.dynamic_slice`` start computed from per-view affine coefficients held in
@@ -19,6 +19,18 @@ The axial (z -> detector row) part of the separable footprint is an
 angle-independent banded matrix for parallel beams and is applied as a single
 einsum outside the kernel (it maps to the MXU directly).
 
+**Lane packing.**  Because the axial part is hoisted out, the kernel's lane
+axis is purely data-parallel: every lane sees the same footprint weights and
+the same gathered-axis window.  Batched inputs therefore fold the batch
+dimension *into the lanes* — ``batch x n_rows`` detector rows are packed onto
+the 128-wide axis — instead of vmapping the ``pallas_call`` per sample.  For
+the paper's flagship 2D limited-angle training shape (nz=1, n_rows=1) this
+turns ~1/128 lane occupancy into full tiles: up to 128x more useful MXU work
+per contraction.  Both public entry points accept a leading batch dim.
+
+Tile/block sizes come from :mod:`repro.kernels.tune` (``KernelConfig``);
+the old hard-coded ``BU``/``BV`` module constants are gone.
+
 Both kernels share the weight math; the backprojector is the exact transpose
 of the forward (same coefficients, transposed contraction), so the pair is
 *matched* in the paper's sense.
@@ -27,7 +39,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,12 +48,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.geometry import CTGeometry
+from repro.kernels import tune
 from repro.kernels.footprint import trapezoid_pixel_weight
 from repro.kernels.ref import _z_overlap_matrix
-
-# Default tile sizes: BV on the 128-wide lane axis, BU on sublanes.
-BU = 16
-BV = 128
 
 
 def _interpret() -> bool:
@@ -91,20 +100,36 @@ def _window_size(geom: CTGeometry, bu: int) -> int:
     return _round_up(max(w, 8), 8)
 
 
+def _pad_views(params: np.ndarray, block: int, q=None):
+    """Pad a view group to a multiple of ``block`` views.  Params rows are
+    duplicated (keeps the weight math finite); the optional sinogram data
+    ``q`` is zero-padded so padded views contribute nothing.  Returns
+    (params, q, clipped_block)."""
+    na = params.shape[0]
+    block = max(1, min(block, na))
+    nap = ((na + block - 1) // block) * block
+    if nap != na:
+        params = np.concatenate([params, np.repeat(params[-1:],
+                                                   nap - na, 0)], 0)
+        if q is not None:
+            q = jnp.pad(q, ((0, nap - na), (0, 0), (0, 0)))
+    return params, q, block
+
+
 # --------------------------------------------------------------------------- #
 # Forward kernel
 # --------------------------------------------------------------------------- #
 def _fp_kernel(params_ref,            # SMEM (n_views, 6)
-               g_ref,                 # VMEM (NG, 1, BV) volume line
-               out_ref,               # VMEM (BA, BU, BV) sino tile
+               g_ref,                 # VMEM (NG, 1, bv) volume line
+               out_ref,               # VMEM (ba, bu, bv) sino tile
                *, W: int, u0: float, du: float, ng: int, bu: int, bv: int,
                ba: int):
-    """One program: for BA consecutive views, contract a (BU, W) footprint
-    tile against the same (W, BV) volume window on the MXU.
+    """One program: for ``ba`` consecutive views, contract a (bu, W) footprint
+    tile against the same (W, bv) volume window on the MXU.
 
     Angle-blocking (ba > 1) is the §Perf-CT hillclimb: the volume line
     g[:, l, vblock] — the dominant HBM stream — is fetched ONCE per program
-    and reused for all BA views, dividing volume traffic by BA."""
+    and reused for all ba views, dividing volume traffic by ba."""
     ab = pl.program_id(0)
     ub = pl.program_id(1)
     li = pl.program_id(3)
@@ -132,7 +157,7 @@ def _fp_kernel(params_ref,            # SMEM (n_views, 6)
             W - jnp.abs(jnp.ceil(gi_b - gi_a)).astype(jnp.int32)) // 2
         start = jnp.clip(start, 0, max(ng - W, 0))
 
-        win = g_ref[pl.ds(start, W), 0, :]                 # (W, BV)
+        win = g_ref[pl.ds(start, W), 0, :]                 # (W, bv)
         gi_abs = start.astype(jnp.float32) + jax.lax.broadcasted_iota(
             jnp.float32, (1, W), 1)                        # (1, W)
         uc = P * gi_abs + Q * lif + R                      # (1, W)
@@ -147,19 +172,16 @@ def _fp_kernel(params_ref,            # SMEM (n_views, 6)
 
 def _run_fp_group(g, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
                   bu: int, bv: int, ba: int = 1):
-    """g: (nx, ny, NVp) volume with v already padded to a BV multiple."""
-    if params.shape[0] == 0:
-        return jnp.zeros((0,) + (0, 0), g.dtype)
-    vol = geom.vol
+    """g: (nx, ny, NVp) volume with the lane axis already padded to a bv
+    multiple (NVp lanes = packed batch * n_rows).  Callers guard against
+    empty view groups."""
+    assert params.shape[0] > 0
     if not gathered_x:
         g = jnp.swapaxes(g, 0, 1)
     ng, nl, nvp = g.shape
     na = params.shape[0]
-    ba = max(1, min(ba, na))
-    nap = _round_up(na, ba)
-    if nap != na:   # pad views with harmless duplicates; dropped after
-        params = np.concatenate([params, np.repeat(params[-1:],
-                                                   nap - na, 0)], 0)
+    params, _, ba = _pad_views(params, ba)   # padded views dropped after
+    nap = params.shape[0]
     nup = _round_up(geom.n_cols, bu)
     W = min(_window_size(geom, bu), ng)
     u0 = float(geom.u_coords()[0])
@@ -182,90 +204,127 @@ def _run_fp_group(g, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
     return out[:na]
 
 
-def fp_parallel_sf_pallas(f, geom: CTGeometry, bu: int = BU, bv: int = BV,
-                          ba: int = 1):
-    """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols)."""
-    vol = geom.vol
-    Fz = jnp.asarray(_z_overlap_matrix(geom))              # (nz, nv)
-    g = jnp.einsum("xyz,zv->xyv", f, Fz)                   # axial footprint
-    nvp = _round_up(geom.n_rows, bv)
-    g = jnp.pad(g, ((0, 0), (0, 0), (0, nvp - geom.n_rows)))
+def _fp_core(g, geom: CTGeometry, cfg: tune.KernelConfig):
+    """g: (nx, ny, NV) lane-packed axial-footprint volume (NV lanes carry
+    batch x n_rows).  Returns the u-major sinogram (n_angles, n_cols, NV)."""
+    nv_lanes = g.shape[2]
+    nvp = _round_up(nv_lanes, cfg.bv)
+    g = jnp.pad(g, ((0, 0), (0, 0), (0, nvp - nv_lanes)))
     px, py, order = _view_params(geom)
     outs = []
     if px.shape[0]:
-        outs.append(_run_fp_group(g, px, geom, True, bu, bv, ba))
+        outs.append(_run_fp_group(g, px, geom, True, cfg.bu, cfg.bv, cfg.ba))
     if py.shape[0]:
-        outs.append(_run_fp_group(g, py, geom, False, bu, bv, ba))
+        outs.append(_run_fp_group(g, py, geom, False, cfg.bu, cfg.bv, cfg.ba))
     out = jnp.concatenate(outs, axis=0)                    # (na, NUp, NVp)
-    out = out[:, :geom.n_cols, :geom.n_rows]
+    out = out[:, :geom.n_cols, :nv_lanes]
     inv = np.argsort(order)
-    return jnp.swapaxes(out[inv], 1, 2)                    # (na, nv, nu)
+    return out[inv]
+
+
+def fp_parallel_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
+                          bv: Optional[int] = None, ba: Optional[int] = None,
+                          config: Optional[tune.KernelConfig] = None):
+    """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or lane-packed
+    batched f: (batch, nx, ny, nz) -> (batch, n_angles, n_rows, n_cols)."""
+    if f.ndim not in (3, 4):
+        raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
+    batch = f.shape[0] if f.ndim == 4 else 1
+    cfg = tune.resolve_config(geom, batch, config, dtype=f.dtype,
+                              bu=bu, bv=bv, ba=ba)
+    Fz = jnp.asarray(_z_overlap_matrix(geom))              # (nz, nv)
+    if f.ndim == 3:
+        g = jnp.einsum("xyz,zv->xyv", f, Fz)               # axial footprint
+        out = _fp_core(g, geom, cfg)                       # (na, nu, nv)
+        return jnp.swapaxes(out, 1, 2)                     # (na, nv, nu)
+    # Lane-packed batch: (B, nx, ny, nz) -> lanes = B * n_rows
+    g = jnp.einsum("bxyz,zv->xybv", f, Fz)                 # (nx, ny, B, nv)
+    g = g.reshape(geom.vol.nx, geom.vol.ny, batch * geom.n_rows)
+    out = _fp_core(g, geom, cfg)                           # (na, nu, B*nv)
+    out = out.reshape(geom.n_angles, geom.n_cols, batch, geom.n_rows)
+    return jnp.transpose(out, (2, 0, 3, 1))                # (B, na, nv, nu)
 
 
 # --------------------------------------------------------------------------- #
 # Backprojection kernel (exact transpose)
 # --------------------------------------------------------------------------- #
 def _bp_kernel(params_ref,            # SMEM (n_views, 6)
-               q_ref,                 # VMEM (1, NU, BV) sino stripe (u-major)
-               out_ref,               # VMEM (BG, 1, BV) volume tile
-               *, Wu: int, u0: float, du: float, nu: int, bg: int, bv: int):
+               q_ref,                 # VMEM (bab, NU, bv) sino stripes (u-major)
+               out_ref,               # VMEM (bg, 1, bv) volume tile
+               *, Wu: int, u0: float, du: float, nu: int, bg: int, bv: int,
+               bab: int):
+    """One program: accumulate ``bab`` views into one (bg, bv) volume tile.
+
+    View-blocking (bab > 1) mirrors the forward kernel's ``ba``: the ``bab``
+    sinogram stripes arrive in a single wide DMA and the output tile is
+    read-modify-written once per block instead of once per view."""
     gb = pl.program_id(0)
     li = pl.program_id(1)
-    a = pl.program_id(3)
+    ab = pl.program_id(3)
 
-    @pl.when(a == 0)
+    @pl.when(ab == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    P = params_ref[a, 0]
-    Q = params_ref[a, 1]
-    R = params_ref[a, 2]
-    hs = params_ref[a, 3]
-    hd = params_ref[a, 4]
-    h = params_ref[a, 5]
-
     lif = li.astype(jnp.float32)
-    gi0 = (gb * bg)
-    uc_a = P * gi0 + Q * lif + R
-    uc_b = P * (gi0 + bg - 1) + Q * lif + R
-    ustart = jnp.floor((jnp.minimum(uc_a, uc_b) - u0) / du).astype(jnp.int32) - (
-        Wu - jnp.abs(jnp.ceil((uc_b - uc_a) / du)).astype(jnp.int32)) // 2
-    ustart = jnp.clip(ustart, 0, max(nu - Wu, 0))
-
-    qwin = q_ref[0, pl.ds(ustart, Wu), :]                  # (Wu, BV)
+    gi0 = gb * bg
     gi_abs = gi0 + jax.lax.broadcasted_iota(jnp.float32, (bg, 1), 0)
-    uc = P * gi_abs + Q * lif + R                          # (bg, 1)
-    uk = u0 + (ustart.astype(jnp.float32)
-               + jax.lax.broadcasted_iota(jnp.float32, (1, Wu), 1)) * du
-    el = uk - du / 2.0                                     # (1, Wu)
-    wgt = trapezoid_pixel_weight(el, el + du,
-                                 uc - hs, uc - hd, uc + hd, uc + hs, h)
-    out_ref[:, 0, :] += jax.lax.dot_general(
-        wgt, qwin, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+    acc = jnp.zeros((bg, bv), jnp.float32)
+    for j in range(bab):
+        a = ab * bab + j
+        P = params_ref[a, 0]
+        Q = params_ref[a, 1]
+        R = params_ref[a, 2]
+        hs = params_ref[a, 3]
+        hd = params_ref[a, 4]
+        h = params_ref[a, 5]
+
+        uc_a = P * gi0 + Q * lif + R
+        uc_b = P * (gi0 + bg - 1) + Q * lif + R
+        ustart = jnp.floor(
+            (jnp.minimum(uc_a, uc_b) - u0) / du).astype(jnp.int32) - (
+            Wu - jnp.abs(jnp.ceil((uc_b - uc_a) / du)).astype(jnp.int32)) // 2
+        ustart = jnp.clip(ustart, 0, max(nu - Wu, 0))
+
+        qwin = q_ref[j, pl.ds(ustart, Wu), :]              # (Wu, bv)
+        uc = P * gi_abs + Q * lif + R                      # (bg, 1)
+        uk = u0 + (ustart.astype(jnp.float32)
+                   + jax.lax.broadcasted_iota(jnp.float32, (1, Wu), 1)) * du
+        el = uk - du / 2.0                                 # (1, Wu)
+        wgt = trapezoid_pixel_weight(el, el + du,
+                                     uc - hs, uc - hd, uc + hd, uc + hs, h)
+        acc += jax.lax.dot_general(
+            wgt, qwin, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    out_ref[:, 0, :] += acc.astype(out_ref.dtype)
 
 
 def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
-                  bg: int, bv: int):
+                  bg: int, bv: int, bab: int = 1):
     """q: (na_group, NUp, NVp) u-major sino slice for this view group.
     Returns the gathered-axis-major volume accumulator (NG, NL, NVp)."""
-    vol = geom.vol
-    ng, nl = (vol.nx, vol.ny) if gathered_x else (vol.ny, vol.nx)
+    ng, nl = ((geom.vol.nx, geom.vol.ny) if gathered_x
+              else (geom.vol.ny, geom.vol.nx))
     na, nup, nvp = q.shape
+    params, q, bab = _pad_views(params, bab, q)
+    nap = params.shape[0]
     ngp = _round_up(ng, bg)
-    du, dx = geom.pixel_width, vol.dx
+    du, dx = geom.pixel_width, geom.vol.dx
     Wu = min(_round_up(int(math.ceil(bg * dx / du)) + 8, 8), nup)
     u0 = float(geom.u_coords()[0])
-    grid = (ngp // bg, nl, nvp // bv, na)
+    grid = (ngp // bg, nl, nvp // bv, nap // bab)
     kernel = functools.partial(_bp_kernel, Wu=Wu, u0=u0, du=du, nu=nup,
-                               bg=bg, bv=bv)
+                               bg=bg, bv=bv, bab=bab)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[pl.BlockSpec((1, nup, bv), lambda gb, l, vb, a, *_: (a, 0, vb))],
-            out_specs=pl.BlockSpec((bg, 1, bv), lambda gb, l, vb, a, *_: (gb, l, vb)),
+            in_specs=[pl.BlockSpec((bab, nup, bv),
+                                   lambda gb, l, vb, ab, *_: (ab, 0, vb))],
+            out_specs=pl.BlockSpec((bg, 1, bv),
+                                   lambda gb, l, vb, ab, *_: (gb, l, vb)),
         ),
         out_shape=jax.ShapeDtypeStruct((ngp, nl, nvp), q.dtype),
         interpret=_interpret(),
@@ -273,28 +332,53 @@ def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
     return out[:ng]
 
 
-def bp_parallel_sf_pallas(sino, geom: CTGeometry, bg: int = BU, bv: int = BV):
-    """sino: (n_angles, n_rows, n_cols) -> volume (nx, ny, nz).
-    Exact transpose of ``fp_parallel_sf_pallas``."""
-    vol = geom.vol
-    nvp = _round_up(geom.n_rows, bv)
-    q = jnp.swapaxes(sino, 1, 2)                           # (na, nu, nv)
-    q = jnp.pad(q, ((0, 0), (0, 0), (0, nvp - geom.n_rows)))
+def _bp_core(q, geom: CTGeometry, cfg: tune.KernelConfig):
+    """q: (n_angles, n_cols, NV) u-major lane-packed sinogram.  Returns the
+    transaxial volume accumulator (nx, ny, NV) — axial transpose not yet
+    applied."""
+    nv_lanes = q.shape[2]
+    nvp = _round_up(nv_lanes, cfg.bv)
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, nvp - nv_lanes)))
     px, py, order = _view_params(geom)
-    q = q[order]                                           # group-major view order
+    q = q[order]                                           # group-major order
     nax = px.shape[0]
-    acc = jnp.zeros((vol.nx, vol.ny, nvp), sino.dtype)
+    acc = jnp.zeros((geom.vol.nx, geom.vol.ny, nvp), q.dtype)
     if nax:
-        acc = acc + _run_bp_group(q[:nax], px, geom, True, bg, bv)
+        acc = acc + _run_bp_group(q[:nax], px, geom, True,
+                                  cfg.bg, cfg.bv, cfg.bab)
     if py.shape[0]:
-        accy = _run_bp_group(q[nax:], py, geom, False, bg, bv)
+        accy = _run_bp_group(q[nax:], py, geom, False,
+                             cfg.bg, cfg.bv, cfg.bab)
         acc = acc + jnp.swapaxes(accy, 0, 1)
+    return acc[:, :, :nv_lanes]
+
+
+def bp_parallel_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
+                          bv: Optional[int] = None, bab: Optional[int] = None,
+                          config: Optional[tune.KernelConfig] = None):
+    """sino: (n_angles, n_rows, n_cols) -> volume (nx, ny, nz), or lane-packed
+    batched sino: (batch, ...) -> (batch, nx, ny, nz).
+    Exact transpose of ``fp_parallel_sf_pallas`` (incl. the batched path)."""
+    if sino.ndim not in (3, 4):
+        raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
+    batch = sino.shape[0] if sino.ndim == 4 else 1
+    cfg = tune.resolve_config(geom, batch, config, dtype=sino.dtype,
+                              bg=bg, bv=bv, bab=bab)
     Fz = jnp.asarray(_z_overlap_matrix(geom))              # (nz, nv)
-    acc = acc[:, :, :geom.n_rows]
-    return jnp.einsum("xyv,zv->xyz", acc, Fz)              # transpose of axial part
+    if sino.ndim == 3:
+        q = jnp.swapaxes(sino, 1, 2)                       # (na, nu, nv)
+        acc = _bp_core(q, geom, cfg)                       # (nx, ny, nv)
+        return jnp.einsum("xyv,zv->xyz", acc, Fz)          # axial transpose
+    q = jnp.transpose(sino, (1, 3, 0, 2))                  # (na, nu, B, nv)
+    q = q.reshape(geom.n_angles, geom.n_cols, batch * geom.n_rows)
+    acc = _bp_core(q, geom, cfg)                           # (nx, ny, B*nv)
+    acc = acc.reshape(geom.vol.nx, geom.vol.ny, batch, geom.n_rows)
+    return jnp.einsum("xybv,zv->bxyz", acc, Fz)
 
 
 def register():
     from repro.kernels import ops
     ops.register_kernel("parallel", "sf", fp_parallel_sf_pallas,
-                        bp_parallel_sf_pallas)
+                        bp_parallel_sf_pallas,
+                        fp_batched=fp_parallel_sf_pallas,
+                        bp_batched=bp_parallel_sf_pallas)

@@ -13,43 +13,64 @@ Backends:
     * ``ref``    — pure-jnp oracles (runs everywhere; the CPU path).
     * ``pallas`` — Pallas TPU kernels (``interpret=True`` on CPU for tests).
     * ``auto``   — pallas for geometry/model pairs with a kernel, else ref.
+
+Batching: kernels may register *batched* variants that fold a leading batch
+dimension into the TPU lane axis (see ``fp_par.py``); when present these
+replace the per-sample ``jax.vmap`` over the ``pallas_call`` — the vmap path
+remains the fallback for the ref backend and batch-unaware kernels.
+
+Tile/block sizes come from :class:`repro.kernels.tune.KernelConfig`; pass
+``config=`` to pin one explicitly (it becomes part of the op-cache key, so a
+fixed config never retraces).  The op cache is a bounded LRU keyed on
+*geometry content* (``CTGeometry.key()``), so equal geometries share ops and
+evicted entries release both the traced functions and the geometry they
+close over.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Tuple
+from collections import OrderedDict
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.geometry import CTGeometry
-from repro.kernels import ref
-
-_KERNEL_TABLE = {}  # {(geom_type, model): (fp_fn, bp_fn)} — filled by kernels pkg
+from repro.kernels import ref, tune
 
 
-def register_kernel(geom_type: str, model: str, fp: Callable, bp: Callable):
-    _KERNEL_TABLE[(geom_type, model)] = (fp, bp)
+class _KernelEntry(NamedTuple):
+    """A registered Pallas kernel pair (+ optional lane-packed batched pair)."""
+    fp: Callable
+    bp: Callable
+    fp_batched: Optional[Callable] = None
+    bp_batched: Optional[Callable] = None
 
 
-@functools.lru_cache(maxsize=256)
-def _build_ops(geom_key: str, model: str, backend: str) -> Tuple[Callable, Callable]:
-    geom = _GEOM_CACHE[geom_key]
-    key = (geom.geom_type, model)
-    # "auto": use the Pallas kernels on TPU; the pure-jnp path elsewhere
-    # (interpret-mode Pallas is for correctness tests, not production CPU use).
-    use_pallas = (backend == "pallas") or (
-        backend == "auto" and key in _KERNEL_TABLE
-        and jax.default_backend() == "tpu")
-    if use_pallas:
-        if key not in _KERNEL_TABLE:
-            raise NotImplementedError(f"no pallas kernel for {key}")
-        kfp, kbp = _KERNEL_TABLE[key]
-        raw_fp = lambda f: kfp(f, geom)
-        raw_bp = lambda p: kbp(p, geom)
-    else:
-        raw_fp = lambda f: ref.forward(f, geom, model)
-        raw_bp = lambda p: ref.adjoint(p, geom, model)
+# {(geom_type, model): _KernelEntry} — filled by the kernels package on import
+_KERNEL_TABLE: Dict[Tuple[str, str], _KernelEntry] = {}
+
+
+def register_kernel(geom_type: str, model: str, fp: Callable, bp: Callable,
+                    fp_batched: Optional[Callable] = None,
+                    bp_batched: Optional[Callable] = None):
+    """Register a Pallas kernel pair.  All callables take
+    ``(array, geom, config=KernelConfig|None)``; the batched variants accept
+    a leading batch dimension and fold it into the kernel (lane packing or
+    view-axis folding) instead of requiring an outer vmap."""
+    _KERNEL_TABLE[(geom_type, model)] = _KernelEntry(
+        fp, bp, fp_batched, bp_batched)
+
+
+class Ops(NamedTuple):
+    """Matched differentiable op bundle for one (geometry, model, backend)."""
+    fp: Callable
+    bp: Callable
+    fp_batched: Optional[Callable]
+    bp_batched: Optional[Callable]
+    config: Optional[tune.KernelConfig]
+
+
+def _make_pair(raw_fp: Callable, raw_bp: Callable) -> Tuple[Callable, Callable]:
+    """Wire (A, A^T) together so each is the other's VJP."""
 
     @jax.custom_vjp
     def fp(f):
@@ -77,19 +98,82 @@ def _build_ops(geom_key: str, model: str, backend: str) -> Tuple[Callable, Calla
     return fp, bp
 
 
-_GEOM_CACHE: dict = {}
+def _use_pallas(geom: CTGeometry, model: str, backend: str) -> bool:
+    # "auto": use the Pallas kernels on TPU; the pure-jnp path elsewhere
+    # (interpret-mode Pallas is for correctness tests, not production CPU use).
+    key = (geom.geom_type, model)
+    return (backend == "pallas") or (
+        backend == "auto" and key in _KERNEL_TABLE
+        and jax.default_backend() == "tpu")
 
 
-def get_ops(geom: CTGeometry, model: str = "sf",
-            backend: str = "auto") -> Tuple[Callable, Callable]:
-    """Return the (forward, back) matched differentiable pair for a geometry."""
-    key = geom.key() + f"|{id(type(geom))}"
-    _GEOM_CACHE[key] = geom
-    return _build_ops(key, model, backend)
+def _build(geom: CTGeometry, model: str, backend: str,
+           config: Optional[tune.KernelConfig], use_pallas: bool) -> Ops:
+    fp_b = bp_b = None
+    if use_pallas:
+        key = (geom.geom_type, model)
+        if key not in _KERNEL_TABLE:
+            raise NotImplementedError(f"no pallas kernel for {key}")
+        entry = _KERNEL_TABLE[key]
+        # An explicit user config is pinned; config=None flows through so
+        # the kernel entry points resolve against the *actual* input batch
+        # size and dtype (batch-/dtype-aware shape classes and autotune).
+        raw_fp = lambda f: entry.fp(f, geom, config=config)
+        raw_bp = lambda p: entry.bp(p, geom, config=config)
+        if entry.fp_batched is not None and entry.bp_batched is not None:
+            fp_b, bp_b = _make_pair(
+                lambda f: entry.fp_batched(f, geom, config=config),
+                lambda p: entry.bp_batched(p, geom, config=config))
+    else:
+        raw_fp = lambda f: ref.forward(f, geom, model)
+        raw_bp = lambda p: ref.adjoint(p, geom, model)
+    fp, bp = _make_pair(raw_fp, raw_bp)
+    return Ops(fp, bp, fp_b, bp_b, config)
+
+
+# Bounded LRU over op bundles.  Keys are geometry *content* (not object
+# identity), so two equal geometries share one entry, and eviction drops the
+# traced ops together with the geometry captured in their closures.
+_OPS_CACHE: "OrderedDict[Tuple, Ops]" = OrderedDict()
+_OPS_CACHE_SIZE = 256
+
+
+def _get_bundle(geom: CTGeometry, model: str = "sf", backend: str = "auto",
+                config: Optional[tune.KernelConfig] = None) -> Ops:
+    use_pallas = _use_pallas(geom, model, backend)
+    # The cache is keyed on the *user's* config value: None means "let the
+    # kernel resolve per call" (note: re-registering configs after a bundle
+    # is cached requires clear_cache() to take effect on the None key).
+    key = (geom.key(), model, backend, config)
+    hit = _OPS_CACHE.get(key)
+    if hit is not None:
+        _OPS_CACHE.move_to_end(key)
+        return hit
+    bundle = _build(geom, model, backend, config, use_pallas)
+    _OPS_CACHE[key] = bundle
+    while len(_OPS_CACHE) > _OPS_CACHE_SIZE:
+        _OPS_CACHE.popitem(last=False)
+    return bundle
+
+
+def clear_cache() -> None:
+    """Drop every cached op bundle (e.g. after re-registering configs)."""
+    _OPS_CACHE.clear()
+
+
+def get_ops(geom: CTGeometry, model: str = "sf", backend: str = "auto",
+            config: Optional[tune.KernelConfig] = None
+            ) -> Tuple[Callable, Callable]:
+    """Return the (forward, back) matched differentiable pair for a geometry.
+
+    Repeated calls with an equal geometry/model/backend/config return the
+    *same* function objects, so jit caches built around them never retrace."""
+    bundle = _get_bundle(geom, model, backend, config)
+    return bundle.fp, bundle.bp
 
 
 def _batched(op: Callable, x, vol_ndim_in: int):
-    """Apply op over optional leading batch dims."""
+    """Apply op over optional leading batch dims (generic vmap fallback)."""
     extra = x.ndim - vol_ndim_in
     if extra == 0:
         return op(x)
@@ -101,15 +185,31 @@ def _batched(op: Callable, x, vol_ndim_in: int):
     return out.reshape(lead + out.shape[1:])
 
 
+def _apply(op: Callable, op_batched: Optional[Callable], x, ndim_in: int):
+    """Dispatch to the kernel's native batched path when one is registered;
+    vmap per sample otherwise."""
+    extra = x.ndim - ndim_in
+    if extra == 0:
+        return op(x)
+    if op_batched is None:
+        return _batched(op, x, ndim_in)
+    lead = x.shape[:extra]
+    flat = x if extra == 1 else x.reshape((-1,) + x.shape[extra:])
+    out = op_batched(flat)
+    return out if extra == 1 else out.reshape(lead + out.shape[1:])
+
+
 def forward_project(f, geom: CTGeometry, model: str = "sf",
-                    backend: str = "auto"):
+                    backend: str = "auto",
+                    config: Optional[tune.KernelConfig] = None):
     """A @ f.  ``f``: (..., nx, ny, nz) -> (..., n_angles, n_rows, n_cols)."""
-    fp, _ = get_ops(geom, model, backend)
-    return _batched(fp, f, 3)
+    b = _get_bundle(geom, model, backend, config)
+    return _apply(b.fp, b.fp_batched, f, 3)
 
 
 def back_project(p, geom: CTGeometry, model: str = "sf",
-                 backend: str = "auto"):
+                 backend: str = "auto",
+                 config: Optional[tune.KernelConfig] = None):
     """A^T @ p.  ``p``: (..., n_angles, n_rows, n_cols) -> (..., nx, ny, nz)."""
-    _, bp = get_ops(geom, model, backend)
-    return _batched(bp, p, 3)
+    b = _get_bundle(geom, model, backend, config)
+    return _apply(b.bp, b.bp_batched, p, 3)

@@ -1,0 +1,299 @@
+"""Kernel tile/block configuration: registry + heuristics + autotuner.
+
+The Pallas projector kernels are parameterized by five tile sizes:
+
+    bu   FP: detector-column tile (sublane axis of the output tile)
+    bv   lane tile — the 128-wide axis.  With lane packing this axis holds
+         ``batch * n_rows`` detector-row lanes, so thin-z training batches
+         fill the MXU instead of padding it.
+    ba   FP: views per program.  The volume line (the dominant HBM stream)
+         is fetched once per program and reused for ``ba`` views.
+    bg   BP: gathered-axis (voxel) tile.
+    bab  BP: views per program — one wide sinogram-stripe DMA and a single
+         output-tile accumulation per ``bab`` views.
+
+Historically these were module constants (``BU``/``BV``); now every call
+site resolves a :class:`KernelConfig` through :func:`get_config`:
+
+    1. an explicit per-shape-class entry (``register_config`` or a previous
+       autotune run), else
+    2. a measured autotune sweep when running on real TPU hardware and
+       autotune is enabled (``REPRO_AUTOTUNE=1`` or ``autotune=True``), else
+    3. the heuristic table (always used in interpret mode / CPU).
+
+Configs are keyed by a coarse *shape class*, not the exact geometry, so one
+sweep serves every geometry of the same regime (e.g. all 2D limited-angle
+training shapes share an entry).  ``KernelConfig`` is frozen/hashable and is
+part of the op-cache key in ``repro.kernels.ops`` — passing the same config
+therefore reuses the cached (traced) ops instead of retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import time
+from typing import Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import CTGeometry
+
+__all__ = [
+    "KernelConfig",
+    "shape_class",
+    "get_config",
+    "resolve_config",
+    "register_config",
+    "autotune",
+    "clear",
+]
+
+LANE = 128          # TPU lane width: the bv axis should be a multiple of this
+_SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Tile/block sizes for one (geometry-shape-class, kernel, dtype)."""
+
+    bu: int = 16     # FP detector-column tile
+    bv: int = LANE   # lane tile (packed batch * detector rows)
+    ba: int = 1      # FP views per program
+    bg: int = 16     # BP gathered-axis tile
+    bab: int = 1     # BP views per program
+
+    def __post_init__(self):
+        for name in ("bu", "bv", "ba", "bg", "bab"):
+            v = getattr(self, name)
+            if not (isinstance(v, int) and v > 0):
+                raise ValueError(f"KernelConfig.{name} must be a positive "
+                                 f"int, got {v!r}")
+        if self.bv % _SUBLANE:
+            raise ValueError(
+                f"bv must be a multiple of {_SUBLANE}, got {self.bv} "
+                f"(use {LANE} for full lane utilization on TPU)")
+
+    def replace(self, **kw) -> "KernelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Shape classes
+# --------------------------------------------------------------------------- #
+def _bucket(n: int) -> int:
+    """Round up to the next power of two (coarse size bucketing)."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def shape_class(geom: CTGeometry, batch: int = 1,
+                dtype=jnp.float32) -> Tuple:
+    """Coarse key identifying a kernel-tuning regime.
+
+    Buckets the axes that drive tile choice: transaxial volume size, the
+    detector-column count, the view count, and the *lane occupancy*
+    ``batch * n_rows`` (what actually lands on the 128-wide axis after
+    packing).  Exact geometry values (angles, spacings, shifts) do not
+    change the optimal tiles and are deliberately excluded.
+    """
+    lanes = batch * geom.n_rows
+    return (geom.geom_type,
+            _bucket(max(geom.vol.nx, geom.vol.ny)),
+            _bucket(geom.n_cols),
+            _bucket(geom.n_angles),
+            _bucket(lanes),
+            jnp.dtype(dtype).name)
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+_REGISTRY: Dict[Tuple, KernelConfig] = {}       # explicit + autotuned entries
+_AUTOTUNED: Dict[Tuple, KernelConfig] = {}      # measured results only
+
+
+def register_config(cls_key: Tuple, cfg: KernelConfig) -> None:
+    """Pin a config for a shape class (overrides heuristics and autotune)."""
+    _REGISTRY[cls_key] = cfg
+
+
+def clear() -> None:
+    _REGISTRY.clear()
+    _AUTOTUNED.clear()
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _autotune_enabled(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return flag
+    val = os.environ.get("REPRO_AUTOTUNE", "0").strip().lower()
+    return val not in ("", "0", "false", "no", "off")
+
+
+def heuristic_config(geom: CTGeometry, batch: int = 1,
+                     dtype=jnp.float32) -> KernelConfig:
+    """Static table used off-TPU and as the autotune fallback/seed."""
+    nu = geom.n_cols
+    na = geom.n_angles
+    # Column tile: big enough to keep the MXU sublane axis busy, small
+    # enough that the gathered-axis window (which grows ~linearly in bu)
+    # stays comfortably inside VMEM.
+    bu = 8 if nu <= 16 else (16 if nu <= 512 else 32)
+    if geom.geom_type == "cone":
+        # The cone kernel's gathered-axis window W grows with bu and is
+        # walked by an inner loop — keep the column tile small.
+        bu = 8
+    bg = bu
+    if _on_tpu():
+        # View blocking amortizes the dominant HBM stream (volume line for
+        # FP, sinogram stripe for BP); diminishing returns past ~8.
+        ba = min(8 if na >= 8 else max(1, na), na)
+        bab = min(4, na)
+    else:
+        # Interpret mode executes the per-view python loop serially — keep
+        # programs minimal so correctness tests stay fast.
+        ba = 1
+        bab = 1
+    return KernelConfig(bu=bu, bv=LANE, ba=ba, bg=bg, bab=bab)
+
+
+def get_config(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
+               autotune_flag: Optional[bool] = None) -> KernelConfig:
+    """Resolve the config for ``geom`` (see module docstring for the order)."""
+    key = shape_class(geom, batch, dtype)
+    if key in _REGISTRY:
+        return _REGISTRY[key]
+    if key in _AUTOTUNED:
+        return _AUTOTUNED[key]
+    if _on_tpu() and _autotune_enabled(autotune_flag):
+        return autotune(geom, batch=batch, dtype=dtype)
+    return heuristic_config(geom, batch, dtype)
+
+
+def resolve_config(geom: CTGeometry, batch: int,
+                   config: Optional[KernelConfig],
+                   dtype=jnp.float32, **overrides) -> KernelConfig:
+    """Shared entry-point resolution: an explicit ``config`` wins, else the
+    registry/heuristics via :func:`get_config` (keyed on the input dtype);
+    non-None keyword overrides (e.g. a caller's ``bu=8``) are applied last."""
+    cfg = config if config is not None \
+        else get_config(geom, batch=batch, dtype=dtype)
+    kw = {k: v for k, v in overrides.items() if v is not None}
+    return cfg.replace(**kw) if kw else cfg
+
+
+# --------------------------------------------------------------------------- #
+# Autotuner
+# --------------------------------------------------------------------------- #
+def _time_call(fn, *args, reps: int = 3) -> float:
+    fn = jax.jit(fn)        # measure the fused program production runs
+    out = fn(*args)                                   # compile + warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def default_candidates(geom: CTGeometry) -> Iterable[KernelConfig]:
+    """The measured sweep grid: small, but covers the axes that matter."""
+    na = geom.n_angles
+    bus = [b for b in (8, 16, 32) if b <= max(_SUBLANE, geom.n_cols * 2)]
+    bas = sorted({min(b, na) for b in (1, 2, 4, 8)})
+    bgs = [8, 16, 32]
+    babs = sorted({min(b, na) for b in (1, 2, 4)})
+    for bu, ba in itertools.product(bus, bas):
+        for bg, bab in itertools.product(bgs, babs):
+            yield KernelConfig(bu=bu, bv=LANE, ba=ba, bg=bg, bab=bab)
+
+
+def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
+             candidates: Optional[Iterable[KernelConfig]] = None,
+             reps: int = 3) -> KernelConfig:
+    """Measure candidate configs with the real kernels and cache the winner.
+
+    Only meaningful on TPU (interpret-mode timings reflect the Python
+    interpreter, not the hardware); elsewhere this returns the heuristic
+    without measuring.  FP and BP are timed independently and the best
+    (bu, ba) is combined with the best (bg, bab).
+    """
+    key = shape_class(geom, batch, dtype)
+    if not _on_tpu():
+        cfg = heuristic_config(geom, batch, dtype)
+        _AUTOTUNED[key] = cfg
+        return cfg
+
+    from repro.kernels import fp_par                  # late: avoid cycle
+
+    cand = list(candidates) if candidates is not None \
+        else list(default_candidates(geom))
+    if geom.geom_type != "parallel":
+        # Only the parallel pair is Pallas end to end; sweep the cone FP
+        # column tile and keep heuristic BP blocks (ref adjoint).
+        return _autotune_cone(geom, batch, dtype, cand, reps, key)
+    fp_grid = sorted({(c.bu, c.ba) for c in cand})
+    bp_grid = sorted({(c.bg, c.bab) for c in cand})
+
+    shape = ((batch,) if batch > 1 else ()) + geom.vol.shape
+    f = jnp.ones(shape, dtype)
+    sshape = ((batch,) if batch > 1 else ()) + geom.sino_shape
+    y = jnp.ones(sshape, dtype)
+
+    heur = heuristic_config(geom, batch, dtype)
+    best_fp, t_fp = None, float("inf")
+    for bu, ba in fp_grid:
+        cfg = KernelConfig(bu=bu, ba=ba)
+        try:
+            t = _time_call(lambda x: fp_par.fp_parallel_sf_pallas(
+                x, geom, config=cfg), f, reps=reps)
+        except Exception:                             # noqa: BLE001
+            continue                                  # invalid tiling — skip
+        if t < t_fp:
+            best_fp, t_fp = (bu, ba), t
+
+    best_bp, t_bp = None, float("inf")
+    for bg, bab in bp_grid:
+        cfg = KernelConfig(bg=bg, bab=bab)
+        try:
+            t = _time_call(lambda p: fp_par.bp_parallel_sf_pallas(
+                p, geom, config=cfg), y, reps=reps)
+        except Exception:                             # noqa: BLE001
+            continue
+        if t < t_bp:
+            best_bp, t_bp = (bg, bab), t
+
+    # Never cache an unmeasured candidate: if a sweep produced no successful
+    # run, fall back to the heuristic for that kernel.
+    cfg = KernelConfig(
+        bu=best_fp[0] if best_fp else heur.bu,
+        ba=best_fp[1] if best_fp else heur.ba,
+        bg=best_bp[0] if best_bp else heur.bg,
+        bab=best_bp[1] if best_bp else heur.bab)
+    _AUTOTUNED[key] = cfg
+    return cfg
+
+
+def _autotune_cone(geom: CTGeometry, batch: int, dtype, cand, reps: int,
+                   key: Tuple) -> KernelConfig:
+    from repro.kernels import fp_cone
+    base = heuristic_config(geom, batch, dtype)
+    shape = ((batch,) if batch > 1 else ()) + geom.vol.shape
+    f = jnp.ones(shape, dtype)
+    best_bu, t_best = base.bu, float("inf")
+    for bu in sorted({c.bu for c in cand}):
+        cfg = base.replace(bu=bu, ba=1)
+        try:
+            t = _time_call(lambda x: fp_cone.fp_cone_sf_pallas(
+                x, geom, config=cfg), f, reps=reps)
+        except Exception:                             # noqa: BLE001
+            continue
+        if t < t_best:
+            best_bu, t_best = bu, t
+    cfg = base.replace(bu=best_bu, ba=1)
+    _AUTOTUNED[key] = cfg
+    return cfg

@@ -10,6 +10,8 @@ def rng():
 
 
 def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (deselect with '-m \"not slow\"')")
     # keep smoke tests on the single real device; the dry-run sets its own
     # XLA_FLAGS before importing jax (see launch/dryrun.py)
     assert jax.device_count() >= 1

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; the non-property "
+    "matched-pair coverage lives in tests/test_batched_pallas.py")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Projector, VolumeGeometry, cone_beam, modular_beam,
                         parallel_beam)

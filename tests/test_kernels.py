@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; the non-property "
+    "kernel-vs-oracle coverage lives in tests/test_batched_pallas.py")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.geometry import VolumeGeometry, parallel_beam
 from repro.kernels import ref

@@ -1,0 +1,167 @@
+"""KernelConfig registry / heuristics / autotune plumbing + the op cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Projector, VolumeGeometry, parallel_beam
+from repro.kernels import ops, ref, tune
+from repro.kernels.tune import KernelConfig
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    tune.clear()
+    yield
+    tune.clear()
+
+
+def _geom(**kw):
+    return parallel_beam(6, 2, 24, VolumeGeometry(16, 16, 2), **kw)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        KernelConfig(bu=0)
+    with pytest.raises(ValueError):
+        KernelConfig(bv=100)          # not a sublane multiple
+    c = KernelConfig(bu=8, ba=2)
+    assert c.replace(ba=4).ba == 4 and c.ba == 2
+
+
+def test_heuristic_defaults_off_tpu():
+    cfg = tune.get_config(_geom())
+    assert cfg.bv % 128 == 0
+    if jax.default_backend() != "tpu":
+        assert cfg.ba == 1 and cfg.bab == 1   # interpret mode: minimal programs
+
+
+def test_shape_class_buckets_not_exact_values():
+    g1 = _geom()
+    g2 = parallel_beam(6, 2, 24, VolumeGeometry(16, 16, 2),
+                       angles=np.linspace(0.1, 2.0, 6))
+    assert tune.shape_class(g1) == tune.shape_class(g2)
+    g3 = parallel_beam(6, 2, 500, VolumeGeometry(16, 16, 2))
+    assert tune.shape_class(g1) != tune.shape_class(g3)
+
+
+def test_register_config_overrides():
+    g = _geom()
+    pinned = KernelConfig(bu=8, ba=2, bg=8, bab=2)
+    tune.register_config(tune.shape_class(g), pinned)
+    assert tune.get_config(g) is pinned
+
+
+def test_autotune_off_tpu_returns_heuristic_and_caches():
+    g = _geom()
+    cfg = tune.autotune(g)
+    assert isinstance(cfg, KernelConfig)
+    assert tune.get_config(g) is cfg          # cached under the shape class
+
+
+def test_pinned_config_produces_correct_kernels():
+    g = _geom()
+    tune.register_config(tune.shape_class(g), KernelConfig(bu=8, ba=3, bab=2))
+    f = jax.random.normal(jax.random.PRNGKey(0), g.vol.shape)
+    out = ops.forward_project(f, g, "sf", backend="pallas")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.forward(f, g, "sf")),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# Op cache: content-keyed, bounded, config round-trip
+# --------------------------------------------------------------------------- #
+def test_ops_cache_content_keyed():
+    """Two distinct but equal geometry objects share one op entry."""
+    fp1, _ = ops.get_ops(_geom(), "sf", "ref")
+    fp2, _ = ops.get_ops(_geom(), "sf", "ref")
+    assert fp1 is fp2
+
+
+def test_ops_cache_bounded_eviction():
+    ops.clear_cache()
+    for i in range(ops._OPS_CACHE_SIZE + 40):
+        g = parallel_beam(6, 2, 24, VolumeGeometry(16, 16, 2,
+                                                   offset_x=1e-3 * (i + 1)))
+        ops.get_ops(g, "sf", "ref")
+    assert len(ops._OPS_CACHE) <= ops._OPS_CACHE_SIZE
+
+
+def test_config_roundtrip_no_retrace():
+    """Equal configs map to the same cached ops, so an outer jit never
+    retraces; a different config is a different entry."""
+    g = _geom()
+    fp1, bp1 = ops.get_ops(g, "sf", "pallas", config=KernelConfig(ba=2))
+    fp2, bp2 = ops.get_ops(g, "sf", "pallas", config=KernelConfig(ba=2))
+    assert fp1 is fp2 and bp1 is bp2
+    fp3, _ = ops.get_ops(g, "sf", "pallas", config=KernelConfig(ba=3))
+    assert fp3 is not fp1
+
+
+def test_dtype_keyed_config_reachable():
+    """Configs registered for a non-f32 dtype class are found by the kernel
+    entry points (the input dtype is threaded into resolution)."""
+    g = _geom()
+    pinned = KernelConfig(bu=8, ba=2)
+    tune.register_config(tune.shape_class(g, 1, jnp.bfloat16), pinned)
+    assert tune.get_config(g, dtype=jnp.bfloat16) is pinned
+    assert tune.get_config(g) is not pinned
+    from repro.kernels import fp_par
+    f = jax.random.normal(jax.random.PRNGKey(0), g.vol.shape).astype(
+        jnp.bfloat16)
+    seen = []
+    orig = tune.get_config
+
+    def spy(geom, batch=1, dtype=jnp.float32, **kw):
+        seen.append(jnp.dtype(dtype).name)
+        return orig(geom, batch=batch, dtype=dtype, **kw)
+
+    tune.get_config = spy
+    try:
+        fp_par.fp_parallel_sf_pallas(f, g)
+        ops.clear_cache()
+        ops.forward_project(f, g, "sf", backend="pallas")   # dispatch path too
+    finally:
+        tune.get_config = orig
+    assert seen.count("bfloat16") >= 2
+
+
+def test_batched_dispatch_resolves_with_real_batch(monkeypatch):
+    """The public dispatch path must resolve configs against the actual
+    leading batch size (batch-aware shape classes), not batch=1."""
+    g = _geom()
+    calls = []
+    orig = tune.get_config
+
+    def spy(geom, batch=1, **kw):
+        calls.append(batch)
+        return orig(geom, batch=batch, **kw)
+
+    monkeypatch.setattr(tune, "get_config", spy)
+    ops.clear_cache()
+    f = jax.random.normal(jax.random.PRNGKey(0), (8,) + g.vol.shape)
+    out = ops.forward_project(f, g, "sf", backend="pallas")
+    assert out.shape == (8,) + g.sino_shape
+    assert 8 in calls
+
+
+def test_projector_accepts_config():
+    g = _geom()
+    cfg = KernelConfig(bu=8, ba=2)
+    proj = Projector(g, "sf", backend="pallas", config=cfg)
+    x = jax.random.normal(jax.random.PRNGKey(0), g.vol.shape)
+    y = jax.random.normal(jax.random.PRNGKey(1), g.sino_shape)
+    lhs = jnp.vdot(proj(x), y)
+    rhs = jnp.vdot(x, proj.T(y))
+    assert abs(lhs - rhs) / max(abs(lhs), 1e-6) < 1e-4
+    with pytest.raises(TypeError):
+        Projector(g, "sf", config="big")      # not a KernelConfig
+
+
+def test_fbp_accepts_config():
+    from repro.core.fbp import fbp
+    g = _geom()
+    sino = jnp.ones(g.sino_shape)
+    rec = fbp(sino, g, config=KernelConfig())
+    assert rec.shape == g.vol.shape
