@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import VolumeGeometry, parallel_beam
+from repro.core import VolumeGeometry, fan_beam, parallel_beam
 from repro.kernels import ref
+from repro.kernels.fp_fan import bp_fan_sf_pallas, fp_fan_sf_pallas
 from repro.kernels.fp_par import bp_parallel_sf_pallas, fp_parallel_sf_pallas
 from repro.kernels.tune import KernelConfig
 
@@ -112,6 +113,36 @@ def run(csv_rows: list):
                      t_grad_pack * 1e6,
                      f"{mode};speedup_vs_vmap="
                      f"{t_grad_vmap / max(t_grad_pack, 1e-12):.2f}x"))
+
+    # ---- fan beam: pallas FP/BP vs oracle, plus the lane-packed batch ---- #
+    if on_tpu:
+        volf = VolumeGeometry(64, 64, 8)
+        gf = fan_beam(24, 8, 96, volf, sod=150.0, sdd=300.0, pixel_width=2.0)
+    else:
+        volf = VolumeGeometry(32, 32, 4)
+        gf = fan_beam(12, 4, 48, volf, sod=80.0, sdd=160.0, pixel_width=2.0)
+    ff = jnp.asarray(np.random.default_rng(5).normal(
+        size=volf.shape).astype(np.float32))
+    yf = jnp.asarray(np.random.default_rng(6).normal(
+        size=gf.sino_shape).astype(np.float32))
+    t = _t(jax.jit(lambda x: ref.forward(x, gf, "sf")), ff)
+    csv_rows.append(("kernel/fp_fan_sf/jnp_oracle", t * 1e6, "cpu-jit"))
+    t = _t(lambda x: fp_fan_sf_pallas(x, gf), ff, reps=reps)
+    csv_rows.append(("kernel/fp_fan_sf/pallas", t * 1e6, mode))
+    t = _t(lambda p: bp_fan_sf_pallas(p, gf), yf, reps=reps)
+    csv_rows.append(("kernel/bp_fan_sf/pallas", t * 1e6, mode))
+
+    # thin-z lane-packed fan batch (seed vmap path vs packed path)
+    gf2 = fan_beam(g2.n_angles, 1, g2.n_cols, vol2,
+                   sod=4.0 * vol2.radius, sdd=8.0 * vol2.radius,
+                   pixel_width=2.0)
+    t_vmapf = _t(lambda x: jax.vmap(
+        lambda s: fp_fan_sf_pallas(s, gf2))(x), fb, reps=reps)
+    csv_rows.append((f"kernel/fp_fan2d_b{B}/pallas_vmap", t_vmapf * 1e6, mode))
+    t_packf = _t(lambda x: fp_fan_sf_pallas(x, gf2), fb, reps=reps)
+    csv_rows.append((f"kernel/fp_fan2d_b{B}/pallas_lane_packed", t_packf * 1e6,
+                     f"{mode};speedup_vs_vmap="
+                     f"{t_vmapf / max(t_packf, 1e-12):.2f}x"))
 
     # ---- 2D production-ish slice (the paper's 512^2 limited-angle) ------- #
     vol3 = VolumeGeometry(256, 256, 1)

@@ -10,10 +10,11 @@ The projector/ops re-exports are lazy to keep `repro.core` importable from
 inside `repro.kernels` (the kernels register themselves with ops at import).
 """
 from repro.core.geometry import (CTGeometry, VolumeGeometry, cone_beam,
-                                 from_config, modular_beam, parallel_beam)
+                                 fan_beam, from_config, modular_beam,
+                                 parallel_beam)
 
 __all__ = [
-    "CTGeometry", "VolumeGeometry", "parallel_beam", "cone_beam",
+    "CTGeometry", "VolumeGeometry", "parallel_beam", "fan_beam", "cone_beam",
     "modular_beam", "from_config", "Projector", "forward_project",
     "back_project", "fbp",
 ]

@@ -51,15 +51,16 @@ def make_distributed_projector(geom: CTGeometry, mesh: Mesh,
 
     Implementation: one ``shard_map``; each shard projects its own angle
     chunk of a (possibly z-slab-sharded) volume with the *local* single-
-    device operators (incl. the Pallas kernels).  Parallel beam only for
-    z-slab sharding (exact independence); cone/modular use angle sharding.
+    device operators (incl. the Pallas kernels).  Parallel and fan beams
+    only for z-slab sharding (both have the angle-independent axial overlap,
+    hence exact z independence); cone/modular use angle sharding.
     """
     na_shards = int(mesh.shape[angle_axis])
     nz_shards = int(mesh.shape[z_axis]) if z_axis else 1
-    if z_axis and geom.geom_type != "parallel":
+    if z_axis and geom.geom_type not in ("parallel", "fan"):
         raise NotImplementedError(
-            "z-slab sharding requires parallel beam (exact z independence); "
-            "shard cone/modular over angles only")
+            "z-slab sharding requires parallel or fan beam (exact z "
+            "independence); shard cone/modular over angles only")
     if z_axis:
         assert geom.vol.nz % nz_shards == 0 and geom.n_rows % nz_shards == 0, \
             "nz and n_rows must divide the z axis"

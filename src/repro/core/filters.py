@@ -11,18 +11,33 @@ import jax.numpy as jnp
 _WINDOWS = ("ramp", "shepp-logan", "hann", "cosine")
 
 
-def ramp_kernel_freq(n_pad: int, du: float, filter_name: str = "ramp") -> np.ndarray:
+def ramp_kernel_freq(n_pad: int, du: float, filter_name: str = "ramp",
+                     equiangular_sdd: float = 0.0) -> np.ndarray:
     """|nu| (cycles/mm) times an apodization window, for rfft of length n_pad.
 
     Uses the band-limited discrete ramp (Kak & Slaney eq. 61): the DC term of
     the spatial kernel is 1/(4 du^2), which avoids the DC bias of a naive
-    |nu| sampling."""
+    |nu| sampling.
+
+    ``equiangular_sdd > 0`` applies the equiangular fan-beam correction
+    (Kak & Slaney eq. 92): the spatial kernel taps are multiplied by
+    ``(gamma / sin gamma)^2`` with ``gamma = n * du / sdd`` — the ramp for
+    data sampled on an arc of radius sdd rather than a line."""
     # spatial-domain band-limited ramp kernel h[n]
     n = np.arange(-(n_pad // 2), n_pad - n_pad // 2)
     h = np.zeros(n_pad)
     h[n == 0] = 1.0 / (4.0 * du * du)
     odd = n % 2 == 1
     h[odd] = -1.0 / (np.pi * np.pi * n[odd] ** 2 * du * du)
+    if equiangular_sdd > 0:
+        gam = n * du / equiangular_sdd
+        sg = np.sin(gam)
+        corr = np.ones_like(h)
+        nz = np.abs(sg) > 1e-12
+        corr[nz] = (gam[nz] / sg[nz]) ** 2
+        # Taps in the zero-padded tail can reach |gamma| ~ pi where the
+        # correction diverges; they carry ~1/n^2 energy, so cap the factor.
+        h = h * np.clip(corr, 1.0, 10.0)
     H = np.abs(np.fft.rfft(np.fft.ifftshift(h)))  # ~|nu|/du, band-limited
     freq = np.fft.rfftfreq(n_pad, d=du)
     nyq = freq[-1] if freq[-1] > 0 else 1.0
@@ -39,14 +54,16 @@ def ramp_kernel_freq(n_pad: int, du: float, filter_name: str = "ramp") -> np.nda
     return (H * w).astype(np.float32)
 
 
-def filter_sinogram(sino, du: float, filter_name: str = "ramp"):
+def filter_sinogram(sino, du: float, filter_name: str = "ramp",
+                    equiangular_sdd: float = 0.0):
     """Apply the ramp filter along the last axis (detector columns).
 
     sino: (..., n_cols).  Zero-pads to the next power of two >= 2*n_cols to
-    avoid circular-convolution wrap-around."""
+    avoid circular-convolution wrap-around.  ``equiangular_sdd``: see
+    :func:`ramp_kernel_freq`."""
     nu = sino.shape[-1]
     n_pad = 1 << int(np.ceil(np.log2(max(2 * nu, 8))))
-    H = jnp.asarray(ramp_kernel_freq(n_pad, du, filter_name))
+    H = jnp.asarray(ramp_kernel_freq(n_pad, du, filter_name, equiangular_sdd))
     S = jnp.fft.rfft(sino, n=n_pad, axis=-1)
     q = jnp.fft.irfft(S * H, n=n_pad, axis=-1)[..., :nu]
     return q.astype(sino.dtype) * du

@@ -19,9 +19,17 @@ Projections (sinogram)
         u(iu) = (iu - (nu-1)/2) * du + center_col_mm
         v(iv) = (iv - (nv-1)/2) * dv + center_row_mm
 
-Geometry types (the three from the paper):
+Geometry types (the paper's geometry classes):
     * ``parallel``  — rays along (cos phi, sin phi, 0); detector u-axis is
       (-sin phi, cos phi, 0), v-axis is +z.
+    * ``fan``       — 2D divergent beam: point source at radius ``sod`` in the
+      transaxial plane, detector at distance ``sdd`` from the source.  Each
+      detector row is an independent in-plane fan of the matching z-slab
+      (the axial footprint is the parallel-beam rectangle overlap — no axial
+      magnification).  ``detector_type="flat"`` means equispaced columns in
+      mm on a flat detector; ``"curved"`` means an equiangular arc centered
+      on the source, with ``u`` the arc length (mm), i.e. the fan angle is
+      ``gamma = u / sdd``.
     * ``cone``      — point source at radius ``sod`` from the rotation axis,
       flat or curved detector at distance ``sdd`` from the source.
       Source position: ``s(phi) = (sod cos phi, sod sin phi, 0)``;
@@ -46,6 +54,7 @@ __all__ = [
     "VolumeGeometry",
     "CTGeometry",
     "parallel_beam",
+    "fan_beam",
     "cone_beam",
     "modular_beam",
     "from_config",
@@ -111,7 +120,7 @@ class VolumeGeometry:
 class CTGeometry:
     """Full scanner description: projections layout + beam geometry + volume."""
 
-    geom_type: str                      # "parallel" | "cone" | "modular"
+    geom_type: str                      # "parallel" | "fan" | "cone" | "modular"
     vol: VolumeGeometry
     n_angles: int
     n_rows: int                         # detector rows (v / axial)
@@ -132,7 +141,7 @@ class CTGeometry:
     det_v: Optional[np.ndarray] = None  # unit vector along rows
 
     def __post_init__(self):
-        if self.geom_type not in ("parallel", "cone", "modular"):
+        if self.geom_type not in ("parallel", "fan", "cone", "modular"):
             raise ValueError(f"unknown geometry type {self.geom_type!r}")
         if self.n_angles <= 0 or self.n_rows <= 0 or self.n_cols <= 0:
             raise ValueError("projection dims must be positive")
@@ -141,14 +150,22 @@ class CTGeometry:
         if len(self.angles) != self.n_angles and self.geom_type != "modular":
             raise ValueError(
                 f"angles has {len(self.angles)} entries, expected n_angles={self.n_angles}")
-        if self.geom_type == "cone":
+        if self.geom_type in ("fan", "cone"):
             if not (self.sdd > self.sod > 0):
-                raise ValueError("cone beam requires sdd > sod > 0")
+                raise ValueError(
+                    f"{self.geom_type} beam requires sdd > sod > 0")
             if self.detector_type not in ("flat", "curved"):
                 raise ValueError(f"unknown detector type {self.detector_type!r}")
             if self.sod <= self.vol.radius:
                 raise ValueError(
                     f"source (sod={self.sod}) inside volume radius {self.vol.radius:.2f}")
+        if self.geom_type == "fan" and self.detector_type == "curved":
+            # arc length must stay inside the half circle around the source
+            umax = (self.n_cols - 1) / 2.0 * self.pixel_width + abs(self.center_col)
+            if umax / self.sdd >= math.pi / 2:
+                raise ValueError(
+                    "curved fan detector spans a fan angle >= pi/2; widen sdd "
+                    "or shrink the detector")
         if self.geom_type == "modular":
             for name in ("source_pos", "det_center", "det_u", "det_v"):
                 v = getattr(self, name)
@@ -173,18 +190,23 @@ class CTGeometry:
 
     @property
     def magnification(self) -> float:
-        return self.sdd / self.sod if self.geom_type == "cone" else 1.0
+        return self.sdd / self.sod if self.geom_type in ("fan", "cone") else 1.0
 
     def max_footprint_cols(self) -> int:
         """Static bound on how many detector columns one voxel can cover (SF)."""
         mag = 1.0
-        if self.geom_type == "cone":
+        if self.geom_type in ("fan", "cone"):
+            # A curved (equiangular) fan footprint in arc length is never wider
+            # than the flat-detector one at the same sdd, so the flat bound
+            # covers both detector types.
             mag = self.sdd / max(self.sod - self.vol.radius, 1e-3)
         width = math.sqrt(2.0) * self.vol.dx * mag
         return int(math.ceil(width / self.pixel_width)) + 2
 
     def max_footprint_rows(self) -> int:
-        """Static bound on detector rows covered by one voxel (SF, axial)."""
+        """Static bound on detector rows covered by one voxel (SF, axial).
+        Fan beams are in-plane: rows see the parallel-beam (unmagnified)
+        rectangle overlap."""
         mag = 1.0
         if self.geom_type == "cone":
             mag = self.sdd / max(self.sod - self.vol.radius, 1e-3)
@@ -231,6 +253,22 @@ def parallel_beam(n_angles: int, n_rows: int, n_cols: int, vol: VolumeGeometry,
     return CTGeometry("parallel", vol, n_angles, n_rows, n_cols,
                       pixel_height, pixel_width, ang,
                       center_row=center_row, center_col=center_col)
+
+
+def fan_beam(n_angles: int, n_rows: int, n_cols: int, vol: VolumeGeometry,
+             sod: float, sdd: float,
+             pixel_width: float = 1.0, pixel_height: float = 1.0,
+             angular_range: float = 360.0, angles=None,
+             center_row: float = 0.0, center_col: float = 0.0,
+             detector_type: str = "flat") -> CTGeometry:
+    """Fan-beam scanner: ``detector_type="flat"`` gives equispaced columns,
+    ``"curved"`` an equiangular arc (``u`` = arc length, fan angle u/sdd)."""
+    ang = (tuple(float(x) for x in np.asarray(angles).ravel()) if angles is not None
+           else _equi_angles(n_angles, angular_range))
+    return CTGeometry("fan", vol, n_angles, n_rows, n_cols,
+                      pixel_height, pixel_width, ang, sod=sod, sdd=sdd,
+                      center_row=center_row, center_col=center_col,
+                      detector_type=detector_type)
 
 
 def cone_beam(n_angles: int, n_rows: int, n_cols: int, vol: VolumeGeometry,
@@ -285,6 +323,8 @@ def from_config(cfg: dict) -> CTGeometry:
     t = cfg.pop("geom_type")
     if t == "parallel":
         return parallel_beam(vol=vol, **cfg)
+    if t == "fan":
+        return fan_beam(vol=vol, **cfg)
     if t == "cone":
         return cone_beam(vol=vol, **cfg)
     if t == "modular":

@@ -55,10 +55,13 @@ class Projector:
         return self.backproject
 
     # -- analytic reconstruction ------------------------------------------ #
-    def fbp(self, sino, filter_name: str = "ramp"):
+    def fbp(self, sino, filter_name: str = "ramp",
+            short_scan: Optional[bool] = None):
+        """``short_scan`` applies Parker weighting for fan beams (``None``
+        auto-detects from the geometry's angular span)."""
         op = functools.partial(_fbp, geom=self.geom, model=self.model,
                                backend=self.backend, filter_name=filter_name,
-                               config=self.config)
+                               config=self.config, short_scan=short_scan)
         return ops._batched(op, sino, 3)
 
     # -- DL integration ---------------------------------------------------- #

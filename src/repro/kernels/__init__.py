@@ -15,6 +15,11 @@ def _register_all():
         fp_cone.register()
     except ImportError:
         pass
+    try:
+        from repro.kernels import fp_fan
+        fp_fan.register()
+    except ImportError:
+        pass
 
 
 _register_all()

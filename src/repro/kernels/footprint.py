@@ -58,10 +58,15 @@ def rect_overlap(lo, hi, edge_lo, edge_hi):
     return ov / jnp.maximum(edge_hi - edge_lo, _EPS)
 
 
-def cone_transaxial_footprint(x, y, cos_a, sin_a, sod, sdd, dx):
-    """Exact corner-projection trapezoid for flat-detector cone beam.
+def fan_transaxial_footprint(x, y, cos_a, sin_a, sod, sdd, dx,
+                             curved: bool = False):
+    """Exact corner-projection trapezoid for a divergent (fan / cone
+    transaxial) beam.
 
     x, y: voxel center world coordinates (broadcastable arrays).
+    ``curved=False`` projects corners onto a flat detector
+    (``u = sdd * q / ell``, equispaced columns); ``curved=True`` onto an
+    equiangular arc (``u = sdd * atan2(q, ell)``, u = arc length).
     Returns (t0, t1, t2, t3, h, ell) where ell is the distance from the
     source plane to the voxel along the central-ray direction."""
     hx = 0.5 * dx
@@ -72,7 +77,10 @@ def cone_transaxial_footprint(x, y, cos_a, sin_a, sod, sdd, dx):
             yy = y + sy
             ell = sod - (xx * cos_a + yy * sin_a)
             q = yy * cos_a - xx * sin_a
-            taus.append(sdd * q / jnp.maximum(ell, _EPS))
+            if curved:
+                taus.append(sdd * jnp.arctan2(q, jnp.maximum(ell, _EPS)))
+            else:
+                taus.append(sdd * q / jnp.maximum(ell, _EPS))
     taus = jnp.sort(jnp.stack(taus, axis=-1), axis=-1)
     t0, t1, t2, t3 = taus[..., 0], taus[..., 1], taus[..., 2], taus[..., 3]
     # Amplitude: path length of the central ray through the voxel footprint.
@@ -83,3 +91,9 @@ def cone_transaxial_footprint(x, y, cos_a, sin_a, sod, sdd, dx):
     rt = jnp.sqrt(rx * rx + ry * ry)
     h = dx / jnp.maximum(jnp.abs(rx), jnp.abs(ry)) * rt
     return t0, t1, t2, t3, h, ell_c
+
+
+def cone_transaxial_footprint(x, y, cos_a, sin_a, sod, sdd, dx):
+    """Flat-detector corner-projection trapezoid (cone transaxial part)."""
+    return fan_transaxial_footprint(x, y, cos_a, sin_a, sod, sdd, dx,
+                                    curved=False)

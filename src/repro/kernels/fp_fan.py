@@ -1,0 +1,403 @@
+"""Pallas TPU kernels: fan-beam Separable-Footprint forward/back projection.
+
+The fan beam is the cone beam with the axial part collapsed: each detector
+row is an independent in-plane fan of the matching z-slab, so the axial
+(z -> detector row) footprint is the *parallel-beam* angle-independent
+rectangle overlap and is hoisted out of the kernel as one einsum — exactly
+like ``fp_par.py``.  What remains inside the kernel is the cone kernel's
+transaxial *corner-projection* trapezoid (``fp_cone.py``), evaluated per
+window element with no per-lane axial resample.
+
+Because the lane axis is purely data-parallel again, **lane packing applies
+directly**: batched inputs fold ``batch x n_rows`` detector rows onto the
+128-wide axis instead of vmapping the ``pallas_call`` — the fan beam is the
+"pre-collapsed axial" case the ROADMAP's cone lane-packing item asks about.
+
+Detector models (``geom.detector_type``):
+
+* ``flat``   — equispaced columns, corner projection ``u = sdd * q / ell``;
+* ``curved`` — equiangular arc, ``u`` is arc length and the corner
+  projection is ``u = sdd * atan2(q, ell)``.  The window-start inversion
+  uses ``tan(u / sdd)`` (the geometry validator guarantees |u|/sdd < pi/2).
+
+Both kernels share the weight math; the backprojector is the exact
+transpose of the forward (same corner-projected breakpoints, transposed
+contraction), so the registered pair is *matched* in the paper's sense —
+unlike the cone pair, fan training steps stay on-kernel end to end.
+
+Tile/block sizes come from :mod:`repro.kernels.tune` (``KernelConfig``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.geometry import CTGeometry
+from repro.kernels import tune
+from repro.kernels.footprint import trapezoid_pixel_weight
+from repro.kernels.fp_cone import _view_params_cone
+from repro.kernels.fp_par import _interpret, _pad_views, _round_up
+from repro.kernels.ref import _z_overlap_matrix
+
+_EPS = 1e-9
+
+
+def _mag_bounds(geom: CTGeometry):
+    r = geom.vol.radius
+    mag_max = geom.sdd / max(geom.sod - r, 1e-3)
+    mag_min = geom.sdd / (geom.sod + r)
+    return mag_min, mag_max
+
+
+def _curved_stretch(geom: CTGeometry) -> float:
+    """For the curved detector du/dgi shrinks by cos^2(gamma) at the fan
+    edge, widening the gathered-index window per u-tile by 1/cos^2."""
+    if geom.detector_type != "curved":
+        return 1.0
+    umax = (geom.n_cols - 1) / 2.0 * geom.pixel_width + abs(geom.center_col)
+    gmax = min(umax / geom.sdd, math.pi / 2 - 1e-3)
+    return 1.0 / (math.cos(gmax) ** 2)
+
+
+def _window_size_fan(geom: CTGeometry, bu: int, ng: int) -> int:
+    """Static bound on the gathered-axis window covering one u-tile (same
+    construction as the cone kernel, plus the curved-detector stretch)."""
+    du, dx = geom.pixel_width, geom.vol.dx
+    mag_min, mag_max = _mag_bounds(geom)
+    stretch = _curved_stretch(geom)
+    span = bu * du * math.sqrt(2.0) * stretch / (dx * mag_min)
+    margin = 2.0 * (math.sqrt(2.0) * dx * mag_max + du) / (dx * mag_min) + 4.0
+    w = int(math.ceil(span + 2 * margin)) + 2
+    return min(_round_up(max(w, 8), 8), ng)
+
+
+def _u_window_size_fan(geom: CTGeometry, bg: int, nup: int) -> int:
+    """Static bound on the detector-column window covering one bg voxel tile
+    (BP).  |duc/dgi| <= sqrt(2) * dx * mag_max and one voxel footprint spans
+    <= sqrt(2) * dx * mag_max; curved footprints are never wider."""
+    du, dx = geom.pixel_width, geom.vol.dx
+    _, mag_max = _mag_bounds(geom)
+    span = bg * dx * math.sqrt(2.0) * mag_max / du
+    margin = 2.0 * math.sqrt(2.0) * dx * mag_max / du + 4.0
+    w = int(math.ceil(span + 2 * margin)) + 2
+    return min(_round_up(max(w, 8), 8), nup)
+
+
+def _fan_trapezoid(P, gi, q0, l0, lif, sdd, dxv, curved):
+    """Shared weight math (used by FP and BP identically, so the pair is an
+    exact transpose): corner-projected trapezoid breakpoints + amplitude for
+    gathered indices ``gi`` (broadcast shape).  ``P`` is the 20-float
+    per-view parameter row of ``fp_cone._view_params_cone``."""
+    Aq, Al = P[0], P[3]
+    q = Aq * gi + q0
+    ell = Al * gi + l0
+    taus = []
+    for k in range(4):
+        dq, dl = P[12 + 2 * k], P[13 + 2 * k]
+        lc = jnp.maximum(ell + dl, _EPS)
+        if curved:
+            taus.append(sdd * jnp.arctan2(q + dq, lc))
+        else:
+            taus.append(sdd * (q + dq) / lc)
+    m1 = jnp.minimum(taus[0], taus[1])
+    M1 = jnp.maximum(taus[0], taus[1])
+    m2 = jnp.minimum(taus[2], taus[3])
+    M2 = jnp.maximum(taus[2], taus[3])
+    t0 = jnp.minimum(m1, m2)
+    t3 = jnp.maximum(M1, M2)
+    ta, tb = jnp.maximum(m1, m2), jnp.minimum(M1, M2)
+    t1 = jnp.minimum(ta, tb)
+    t2 = jnp.maximum(ta, tb)
+    Arx, Brx, Crx, Ary, Bry, Cry = P[6:12]
+    rx = Arx * gi + Brx * lif + Crx
+    ry = Ary * gi + Bry * lif + Cry
+    h = dxv * jnp.sqrt(rx * rx + ry * ry) / jnp.maximum(
+        jnp.maximum(jnp.abs(rx), jnp.abs(ry)), _EPS)
+    return t0, t1, t2, t3, h
+
+
+# --------------------------------------------------------------------------- #
+# Forward kernel
+# --------------------------------------------------------------------------- #
+def _fp_fan_kernel(params_ref,          # SMEM (n_views, 20)
+                   g_ref,               # VMEM (NG, 1, bv) volume line
+                   out_ref,             # VMEM (ba, bu, bv) sino tile
+                   *, W: int, u0: float, du: float, sdd: float, dxv: float,
+                   ng: int, bu: int, bv: int, ba: int, curved: bool):
+    """One program: for ``ba`` consecutive views, contract a (bu, W)
+    corner-projection footprint tile against the same (W, bv) volume window
+    on the MXU.  Identical structure to ``fp_par._fp_kernel`` — the lane
+    axis carries packed ``batch x n_rows`` rows — with the parallel affine
+    ``uc`` replaced by the divergent corner projection."""
+    ab = pl.program_id(0)
+    ub = pl.program_id(1)
+    li = pl.program_id(3)
+
+    @pl.when(li == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lif = li.astype(jnp.float32)
+    u_first = u0 + (ub * bu) * du
+    u_last = u_first + (bu - 1) * du
+
+    for j in range(ba):
+        a = ab * ba + j
+        P = [params_ref[a, i] for i in range(20)]
+        Aq, Bq, Cq, Al, Bl, Cl = P[:6]
+        q0 = Bq * lif + Cq
+        l0 = Bl * lif + Cl
+
+        # window start: invert the center projection u(gi)
+        def gi_of(u):
+            if curved:
+                t = jnp.tan(u / sdd)
+                den = Aq - t * Al
+                den = jnp.where(jnp.abs(den) > 1e-6,
+                                den, jnp.where(den >= 0, 1e-6, -1e-6))
+                return (t * l0 - q0) / den
+            den = sdd * Aq - u * Al
+            den = jnp.where(jnp.abs(den) > 1e-6,
+                            den, jnp.where(den >= 0, 1e-6, -1e-6))
+            return (u * l0 - sdd * q0) / den
+
+        g1, g2 = gi_of(u_first), gi_of(u_last)
+        start = jnp.floor(jnp.minimum(g1, g2)).astype(jnp.int32) - (
+            W - jnp.abs(jnp.ceil(g2 - g1)).astype(jnp.int32)) // 2
+        start = jnp.clip(start, 0, max(ng - W, 0))
+
+        win = g_ref[pl.ds(start, W), 0, :]                     # (W, bv)
+        gi = start.astype(jnp.float32) + jax.lax.broadcasted_iota(
+            jnp.float32, (1, W), 1)                            # (1, W)
+        t0, t1, t2, t3, h = _fan_trapezoid(P, gi, q0, l0, lif, sdd, dxv,
+                                           curved)
+
+        uk = u_first + du * jax.lax.broadcasted_iota(jnp.float32, (bu, 1), 0)
+        el = uk - du / 2.0                                     # (bu, 1)
+        wgt = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
+        out_ref[j] += jax.lax.dot_general(
+            wgt, win, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def _run_fp_group(g, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
+                  bu: int, bv: int, ba: int = 1):
+    """g: (nx, ny, NVp) volume with the lane axis already padded to a bv
+    multiple (NVp lanes = packed batch * n_rows)."""
+    assert params.shape[0] > 0
+    if not gathered_x:
+        g = jnp.swapaxes(g, 0, 1)
+    ng, nl, nvp = g.shape
+    na = params.shape[0]
+    params, _, ba = _pad_views(params, ba)     # padded views dropped after
+    nap = params.shape[0]
+    nup = _round_up(geom.n_cols, bu)
+    W = _window_size_fan(geom, bu, ng)
+    grid = (nap // ba, nup // bu, nvp // bv, nl)
+    kernel = functools.partial(
+        _fp_fan_kernel, W=W, u0=float(geom.u_coords()[0]),
+        du=geom.pixel_width, sdd=geom.sdd, dxv=geom.vol.dx, ng=ng,
+        bu=bu, bv=bv, ba=ba, curved=geom.detector_type == "curved")
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((ng, 1, bv),
+                                   lambda ab, ub, vb, l, *_: (0, l, vb))],
+            out_specs=pl.BlockSpec((ba, bu, bv),
+                                   lambda ab, ub, vb, l, *_: (ab, ub, vb)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nap, nup, nvp), g.dtype),
+        interpret=_interpret(),
+    )(jnp.asarray(params), g)
+    return out[:na]
+
+
+def _fp_core(g, geom: CTGeometry, cfg: tune.KernelConfig):
+    """g: (nx, ny, NV) lane-packed axial-footprint volume.  Returns the
+    u-major sinogram (n_angles, n_cols, NV)."""
+    nv_lanes = g.shape[2]
+    nvp = _round_up(nv_lanes, cfg.bv)
+    g = jnp.pad(g, ((0, 0), (0, 0), (0, nvp - nv_lanes)))
+    px, py, order = _view_params_cone(geom)
+    outs = []
+    if px.shape[0]:
+        outs.append(_run_fp_group(g, px, geom, True, cfg.bu, cfg.bv, cfg.ba))
+    if py.shape[0]:
+        outs.append(_run_fp_group(g, py, geom, False, cfg.bu, cfg.bv, cfg.ba))
+    out = jnp.concatenate(outs, axis=0)                        # (na, NUp, NVp)
+    out = out[:, :geom.n_cols, :nv_lanes]
+    inv = np.argsort(order)
+    return out[inv]
+
+
+def fp_fan_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
+                     bv: Optional[int] = None, ba: Optional[int] = None,
+                     config: Optional[tune.KernelConfig] = None):
+    """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or lane-packed
+    batched f: (batch, nx, ny, nz) -> (batch, n_angles, n_rows, n_cols)."""
+    assert geom.geom_type == "fan"
+    if f.ndim not in (3, 4):
+        raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
+    batch = f.shape[0] if f.ndim == 4 else 1
+    cfg = tune.resolve_config(geom, batch, config, dtype=f.dtype,
+                              bu=bu, bv=bv, ba=ba)
+    Fz = jnp.asarray(_z_overlap_matrix(geom))                  # (nz, nv)
+    if f.ndim == 3:
+        g = jnp.einsum("xyz,zv->xyv", f, Fz)                   # axial footprint
+        out = _fp_core(g, geom, cfg)                           # (na, nu, nv)
+        return jnp.swapaxes(out, 1, 2)                         # (na, nv, nu)
+    g = jnp.einsum("bxyz,zv->xybv", f, Fz)                     # (nx, ny, B, nv)
+    g = g.reshape(geom.vol.nx, geom.vol.ny, batch * geom.n_rows)
+    out = _fp_core(g, geom, cfg)                               # (na, nu, B*nv)
+    out = out.reshape(geom.n_angles, geom.n_cols, batch, geom.n_rows)
+    return jnp.transpose(out, (2, 0, 3, 1))                    # (B, na, nv, nu)
+
+
+# --------------------------------------------------------------------------- #
+# Backprojection kernel (exact transpose)
+# --------------------------------------------------------------------------- #
+def _bp_fan_kernel(params_ref,          # SMEM (n_views, 20)
+                   q_ref,               # VMEM (bab, NU, bv) sino stripes
+                   out_ref,             # VMEM (bg, 1, bv) volume tile
+                   *, Wu: int, u0: float, du: float, sdd: float, dxv: float,
+                   nu: int, bg: int, bv: int, bab: int, curved: bool):
+    """One program: accumulate ``bab`` views into one (bg, bv) volume tile —
+    the exact transpose of ``_fp_fan_kernel`` (same corner-projected
+    breakpoints, transposed contraction)."""
+    gb = pl.program_id(0)
+    li = pl.program_id(1)
+    ab = pl.program_id(3)
+
+    @pl.when(ab == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lif = li.astype(jnp.float32)
+    gi0 = gb * bg
+    gi_abs = gi0 + jax.lax.broadcasted_iota(jnp.float32, (bg, 1), 0)
+
+    acc = jnp.zeros((bg, bv), jnp.float32)
+    for j in range(bab):
+        a = ab * bab + j
+        P = [params_ref[a, i] for i in range(20)]
+        Aq, Bq, Cq, Al, Bl, Cl = P[:6]
+        q0 = Bq * lif + Cq
+        l0 = Bl * lif + Cl
+
+        def uc_of(gi):
+            qg = Aq * gi + q0
+            lg = jnp.maximum(Al * gi + l0, _EPS)
+            if curved:
+                return sdd * jnp.arctan2(qg, lg)
+            return sdd * qg / lg
+
+        uc_a = uc_of(gi0.astype(jnp.float32))
+        uc_b = uc_of((gi0 + bg - 1).astype(jnp.float32))
+        ustart = jnp.floor(
+            (jnp.minimum(uc_a, uc_b) - u0) / du).astype(jnp.int32) - (
+            Wu - jnp.abs(jnp.ceil((uc_b - uc_a) / du)).astype(jnp.int32)) // 2
+        ustart = jnp.clip(ustart, 0, max(nu - Wu, 0))
+
+        qwin = q_ref[j, pl.ds(ustart, Wu), :]                  # (Wu, bv)
+        t0, t1, t2, t3, h = _fan_trapezoid(P, gi_abs, q0, l0, lif, sdd, dxv,
+                                           curved)             # (bg, 1)
+        uk = u0 + (ustart.astype(jnp.float32)
+                   + jax.lax.broadcasted_iota(jnp.float32, (1, Wu), 1)) * du
+        el = uk - du / 2.0                                     # (1, Wu)
+        wgt = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
+        acc += jax.lax.dot_general(
+            wgt, qwin, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    out_ref[:, 0, :] += acc.astype(out_ref.dtype)
+
+
+def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
+                  bg: int, bv: int, bab: int = 1):
+    """q: (na_group, NUp, NVp) u-major sino slice for this view group.
+    Returns the gathered-axis-major volume accumulator (NG, NL, NVp)."""
+    ng, nl = ((geom.vol.nx, geom.vol.ny) if gathered_x
+              else (geom.vol.ny, geom.vol.nx))
+    na, nup, nvp = q.shape
+    params, q, bab = _pad_views(params, bab, q)
+    nap = params.shape[0]
+    ngp = _round_up(ng, bg)
+    Wu = _u_window_size_fan(geom, bg, nup)
+    grid = (ngp // bg, nl, nvp // bv, nap // bab)
+    kernel = functools.partial(
+        _bp_fan_kernel, Wu=Wu, u0=float(geom.u_coords()[0]),
+        du=geom.pixel_width, sdd=geom.sdd, dxv=geom.vol.dx, nu=nup,
+        bg=bg, bv=bv, bab=bab, curved=geom.detector_type == "curved")
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((bab, nup, bv),
+                                   lambda gb, l, vb, ab, *_: (ab, 0, vb))],
+            out_specs=pl.BlockSpec((bg, 1, bv),
+                                   lambda gb, l, vb, ab, *_: (gb, l, vb)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((ngp, nl, nvp), q.dtype),
+        interpret=_interpret(),
+    )(jnp.asarray(params), q)
+    return out[:ng]
+
+
+def _bp_core(q, geom: CTGeometry, cfg: tune.KernelConfig):
+    """q: (n_angles, n_cols, NV) u-major lane-packed sinogram.  Returns the
+    transaxial volume accumulator (nx, ny, NV)."""
+    nv_lanes = q.shape[2]
+    nvp = _round_up(nv_lanes, cfg.bv)
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, nvp - nv_lanes)))
+    px, py, order = _view_params_cone(geom)
+    q = q[order]                                               # group-major
+    nax = px.shape[0]
+    acc = jnp.zeros((geom.vol.nx, geom.vol.ny, nvp), q.dtype)
+    if nax:
+        acc = acc + _run_bp_group(q[:nax], px, geom, True,
+                                  cfg.bg, cfg.bv, cfg.bab)
+    if py.shape[0]:
+        accy = _run_bp_group(q[nax:], py, geom, False,
+                             cfg.bg, cfg.bv, cfg.bab)
+        acc = acc + jnp.swapaxes(accy, 0, 1)
+    return acc[:, :, :nv_lanes]
+
+
+def bp_fan_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
+                     bv: Optional[int] = None, bab: Optional[int] = None,
+                     config: Optional[tune.KernelConfig] = None):
+    """sino: (n_angles, n_rows, n_cols) -> volume (nx, ny, nz), or
+    lane-packed batched sino: (batch, ...) -> (batch, nx, ny, nz).
+    Exact transpose of ``fp_fan_sf_pallas`` (incl. the batched path)."""
+    assert geom.geom_type == "fan"
+    if sino.ndim not in (3, 4):
+        raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
+    batch = sino.shape[0] if sino.ndim == 4 else 1
+    cfg = tune.resolve_config(geom, batch, config, dtype=sino.dtype,
+                              bg=bg, bv=bv, bab=bab)
+    Fz = jnp.asarray(_z_overlap_matrix(geom))                  # (nz, nv)
+    if sino.ndim == 3:
+        q = jnp.swapaxes(sino, 1, 2)                           # (na, nu, nv)
+        acc = _bp_core(q, geom, cfg)                           # (nx, ny, nv)
+        return jnp.einsum("xyv,zv->xyz", acc, Fz)              # axial transpose
+    q = jnp.transpose(sino, (1, 3, 0, 2))                      # (na, nu, B, nv)
+    q = q.reshape(geom.n_angles, geom.n_cols, batch * geom.n_rows)
+    acc = _bp_core(q, geom, cfg)                               # (nx, ny, B*nv)
+    acc = acc.reshape(geom.vol.nx, geom.vol.ny, batch, geom.n_rows)
+    return jnp.einsum("xybv,zv->bxyz", acc, Fz)
+
+
+def register():
+    from repro.kernels import ops
+    ops.register_kernel("fan", "sf", fp_fan_sf_pallas, bp_fan_sf_pallas,
+                        fp_batched=fp_fan_sf_pallas,
+                        bp_batched=bp_fan_sf_pallas)

@@ -147,6 +147,11 @@ def heuristic_config(geom: CTGeometry, batch: int = 1,
         # The cone kernel's gathered-axis window W grows with bu and is
         # walked by an inner loop — keep the column tile small.
         bu = 8
+    elif geom.geom_type == "fan":
+        # Fan is lane-packed like parallel, but its gathered-axis window is
+        # magnified by sdd/(sod - R) — halve the column tile so the W-wide
+        # VMEM window stays comparable to the parallel kernel's.
+        bu = max(8, bu // 2)
     bg = bu
     if _on_tpu():
         # View blocking amortizes the dominant HBM stream (volume line for
@@ -232,10 +237,20 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
 
     cand = list(candidates) if candidates is not None \
         else list(default_candidates(geom))
-    if geom.geom_type != "parallel":
-        # Only the parallel pair is Pallas end to end; sweep the cone FP
-        # column tile and keep heuristic BP blocks (ref adjoint).
+    if geom.geom_type == "cone":
+        # The cone pair is Pallas-forward only; sweep the cone FP column
+        # tile and keep heuristic BP blocks (ref adjoint).
         return _autotune_cone(geom, batch, dtype, cand, reps, key)
+    if geom.geom_type == "fan":
+        # Fan is Pallas end to end like parallel: same full fp/bp sweep.
+        from repro.kernels import fp_fan
+        fp_fn, bp_fn = fp_fan.fp_fan_sf_pallas, fp_fan.bp_fan_sf_pallas
+    elif geom.geom_type == "parallel":
+        fp_fn, bp_fn = fp_par.fp_parallel_sf_pallas, fp_par.bp_parallel_sf_pallas
+    else:
+        cfg = heuristic_config(geom, batch, dtype)
+        _AUTOTUNED[key] = cfg
+        return cfg
     fp_grid = sorted({(c.bu, c.ba) for c in cand})
     bp_grid = sorted({(c.bg, c.bab) for c in cand})
 
@@ -249,8 +264,7 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
     for bu, ba in fp_grid:
         cfg = KernelConfig(bu=bu, ba=ba)
         try:
-            t = _time_call(lambda x: fp_par.fp_parallel_sf_pallas(
-                x, geom, config=cfg), f, reps=reps)
+            t = _time_call(lambda x: fp_fn(x, geom, config=cfg), f, reps=reps)
         except Exception:                             # noqa: BLE001
             continue                                  # invalid tiling — skip
         if t < t_fp:
@@ -260,8 +274,7 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
     for bg, bab in bp_grid:
         cfg = KernelConfig(bg=bg, bab=bab)
         try:
-            t = _time_call(lambda p: fp_par.bp_parallel_sf_pallas(
-                p, geom, config=cfg), y, reps=reps)
+            t = _time_call(lambda p: bp_fn(p, geom, config=cfg), y, reps=reps)
         except Exception:                             # noqa: BLE001
             continue
         if t < t_bp:

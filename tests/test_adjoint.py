@@ -13,8 +13,8 @@ pytest.importorskip(
     "matched-pair coverage lives in tests/test_batched_pallas.py")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (Projector, VolumeGeometry, cone_beam, modular_beam,
-                        parallel_beam)
+from repro.core import (Projector, VolumeGeometry, cone_beam, fan_beam,
+                        modular_beam, parallel_beam)
 from repro.core.geometry import cone_as_modular
 
 
@@ -51,6 +51,22 @@ def test_cone_curved_matched():
     _dot_test(Projector(g, "joseph"))
 
 
+@pytest.mark.parametrize("det", ["flat", "curved"])
+def test_fan_matched(det):
+    v = VolumeGeometry(24, 24, 4)
+    g = fan_beam(8, 4, 36, v, sod=120.0, sdd=240.0, pixel_width=2.0,
+                 detector_type=det)
+    _dot_test(Projector(g, "sf"))
+
+
+@pytest.mark.parametrize("det", ["flat", "curved"])
+def test_fan_pallas_pair_matched(det):
+    v = VolumeGeometry(24, 24, 4)
+    g = fan_beam(8, 4, 36, v, sod=120.0, sdd=240.0, pixel_width=2.0,
+                 detector_type=det)
+    _dot_test(Projector(g, "sf", backend="pallas"))
+
+
 def test_modular_matched():
     v = VolumeGeometry(20, 20, 6)
     g = cone_as_modular(cone_beam(6, 10, 30, v, sod=100.0, sdd=200.0,
@@ -85,6 +101,18 @@ def test_cone_matched_property(sod, mag, seed):
     v = VolumeGeometry(16, 16, 6)
     g = cone_beam(6, 10, 30, v, sod=sod, sdd=sod * mag,
                   pixel_width=2.0, pixel_height=2.0)
+    _dot_test(Projector(g, "sf"), key=seed)
+
+
+@settings(max_examples=6, deadline=None)
+@given(sod=st.floats(60.0, 200.0), mag=st.floats(1.2, 3.0),
+       curved=st.booleans(), seed=st.integers(0, 100))
+def test_fan_matched_property(sod, mag, curved, seed):
+    """Property over randomized fan geometries: flat + curved detectors,
+    varying magnification."""
+    v = VolumeGeometry(16, 16, 4)
+    g = fan_beam(6, 4, 30, v, sod=sod, sdd=sod * mag, pixel_width=2.0,
+                 detector_type="curved" if curved else "flat")
     _dot_test(Projector(g, "sf"), key=seed)
 
 

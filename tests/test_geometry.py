@@ -2,7 +2,8 @@ import numpy as np
 import pytest
 
 from repro.core.geometry import (CTGeometry, VolumeGeometry, cone_beam,
-                                 from_config, modular_beam, parallel_beam)
+                                 fan_beam, from_config, modular_beam,
+                                 parallel_beam)
 
 
 def test_volume_coords_centered():
@@ -36,12 +37,43 @@ def test_angles_subset_and_nonequispaced():
     assert np.allclose(sub.angles_array(), ang[[0, 3, 5]], atol=1e-6)
 
 
+def test_fan_validation():
+    v = VolumeGeometry(32, 32, 2)
+    with pytest.raises(ValueError):
+        fan_beam(10, 2, 48, v, sod=400.0, sdd=300.0)   # sdd < sod
+    with pytest.raises(ValueError):
+        fan_beam(10, 2, 48, v, sod=10.0, sdd=300.0)    # source inside volume
+    with pytest.raises(ValueError):
+        fan_beam(10, 2, 48, v, sod=100.0, sdd=200.0, detector_type="bent")
+    with pytest.raises(ValueError):
+        # curved arc spanning >= pi/2 half fan angle
+        fan_beam(10, 2, 480, v, sod=100.0, sdd=200.0, pixel_width=2.0,
+                 detector_type="curved")
+    g = fan_beam(10, 2, 48, v, sod=100.0, sdd=200.0, detector_type="curved")
+    assert g.magnification == 2.0
+    sub = g.subset([1, 4])
+    assert sub.n_angles == 2 and sub.geom_type == "fan"
+
+
 def test_from_config_roundtrip():
     cfg = {"geom_type": "parallel", "n_angles": 6, "n_rows": 2, "n_cols": 24,
            "volume": {"nx": 16, "ny": 16, "nz": 2}}
     g = from_config(cfg)
     assert g.sino_shape == (6, 2, 24)
     assert g.key()  # hashable static key
+
+
+def test_from_config_fan_roundtrip():
+    """Regression: from_config used to raise for fan dicts."""
+    cfg = {"geom_type": "fan", "n_angles": 8, "n_rows": 2, "n_cols": 32,
+           "sod": 100.0, "sdd": 250.0, "pixel_width": 2.0,
+           "detector_type": "curved",
+           "volume": {"nx": 16, "ny": 16, "nz": 2}}
+    g = from_config(cfg)
+    assert g.geom_type == "fan" and g.detector_type == "curved"
+    assert g.sino_shape == (8, 2, 32)
+    assert g.sod == 100.0 and g.sdd == 250.0
+    assert g.key()
 
 
 def test_modular_requires_vectors():

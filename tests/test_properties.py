@@ -11,21 +11,29 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import Projector, VolumeGeometry, parallel_beam, cone_beam
+from repro.core import (Projector, VolumeGeometry, fan_beam, parallel_beam,
+                        cone_beam)
+
+# hypothesis strategy over geometry families: parallel + fan (flat/curved)
+GEOM_KINDS = st.sampled_from(["parallel", "fan-flat", "fan-curved"])
 
 
-def _geom(na=8, seed=0):
+def _geom(na=8, seed=0, kind="parallel"):
     vol = VolumeGeometry(16, 16, 4)
     rng = np.random.default_rng(seed)
     ang = np.sort(rng.uniform(0, np.pi, na))
-    return parallel_beam(na, 4, 24, vol, angles=ang)
+    if kind == "parallel":
+        return parallel_beam(na, 4, 24, vol, angles=ang)
+    det = "curved" if kind == "fan-curved" else "flat"
+    return fan_beam(na, 4, 24, vol, sod=80.0, sdd=160.0, pixel_width=2.0,
+                    angles=ang, detector_type=det)
 
 
 @settings(max_examples=8, deadline=None)
 @given(a=st.floats(-3.0, 3.0), b=st.floats(-3.0, 3.0),
-       seed=st.integers(0, 50))
-def test_projector_linearity(a, b, seed):
-    g = _geom(seed=seed)
+       seed=st.integers(0, 50), kind=GEOM_KINDS)
+def test_projector_linearity(a, b, seed, kind):
+    g = _geom(seed=seed, kind=kind)
     proj = Projector(g, "sf")
     kx, ky = jax.random.split(jax.random.PRNGKey(seed))
     x = jax.random.normal(kx, g.vol.shape)
@@ -37,12 +45,12 @@ def test_projector_linearity(a, b, seed):
 
 
 @settings(max_examples=6, deadline=None)
-@given(seed=st.integers(0, 50), k=st.integers(1, 6))
-def test_view_subset_consistency(seed, k):
+@given(seed=st.integers(0, 50), k=st.integers(1, 6), kind=GEOM_KINDS)
+def test_view_subset_consistency(seed, k, kind):
     """Projecting with geometry.subset(idx) == slicing the full sinogram —
     the invariant behind limited-angle/few-view augmentation and the
     distributed angle sharding."""
-    g = _geom(na=8, seed=seed)
+    g = _geom(na=8, seed=seed, kind=kind)
     idx = np.sort(np.random.default_rng(seed).choice(8, size=k, replace=False))
     sub = g.subset(idx)
     x = jax.random.normal(jax.random.PRNGKey(seed), g.vol.shape)
