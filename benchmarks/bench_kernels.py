@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import VolumeGeometry, fan_beam, parallel_beam
+from repro.core import VolumeGeometry, cone_beam, fan_beam, parallel_beam
 from repro.kernels import ref
+from repro.kernels.fp_cone import bp_cone_sf_pallas, fp_cone_sf_pallas
 from repro.kernels.fp_fan import bp_fan_sf_pallas, fp_fan_sf_pallas
 from repro.kernels.fp_par import bp_parallel_sf_pallas, fp_parallel_sf_pallas
 from repro.kernels.tune import KernelConfig
@@ -143,6 +144,32 @@ def run(csv_rows: list):
     csv_rows.append((f"kernel/fp_fan2d_b{B}/pallas_lane_packed", t_packf * 1e6,
                      f"{mode};speedup_vs_vmap="
                      f"{t_vmapf / max(t_packf, 1e-12):.2f}x"))
+
+    # ---- cone beam: the Pallas FP/BP matched pair ------------------------ #
+    # The BP is the exact transpose of the FP (transposed transaxial
+    # contraction + per-element axial matvec in the adjoint direction); the
+    # bp_over_fp ratio is the number the CI regression gate tracks.
+    if on_tpu:
+        volc = VolumeGeometry(64, 64, 16)
+        gc = cone_beam(24, 16, 96, volc, sod=150.0, sdd=300.0,
+                       pixel_width=2.0, pixel_height=2.0)
+    else:
+        volc = VolumeGeometry(16, 16, 8)
+        gc = cone_beam(4, 8, 24, volc, sod=80.0, sdd=160.0,
+                       pixel_width=2.0, pixel_height=2.0)
+    fc = jnp.asarray(np.random.default_rng(7).normal(
+        size=volc.shape).astype(np.float32))
+    yc = jnp.asarray(np.random.default_rng(8).normal(
+        size=gc.sino_shape).astype(np.float32))
+    t = _t(jax.jit(lambda x: ref.forward(x, gc, "sf")), fc)
+    csv_rows.append(("kernel/fp_cone_sf/jnp_oracle", t * 1e6, "cpu-jit"))
+    t = _t(jax.jit(lambda p: ref.adjoint(p, gc, "sf")), yc)
+    csv_rows.append(("kernel/bp_cone_sf/jnp_oracle", t * 1e6, "cpu-jit"))
+    t_fpc = _t(lambda x: fp_cone_sf_pallas(x, gc), fc, reps=reps)
+    csv_rows.append(("kernel/fp_cone_sf/pallas", t_fpc * 1e6, mode))
+    t_bpc = _t(lambda p: bp_cone_sf_pallas(p, gc), yc, reps=reps)
+    csv_rows.append(("kernel/bp_cone_sf/pallas", t_bpc * 1e6,
+                     f"{mode};bp_over_fp={t_bpc / max(t_fpc, 1e-12):.2f}x"))
 
     # ---- 2D production-ish slice (the paper's 512^2 limited-angle) ------- #
     vol3 = VolumeGeometry(256, 256, 1)

@@ -1,0 +1,137 @@
+"""Benchmark regression gate: diff a fresh ``bench_kernels`` CSV against the
+committed ``benchmarks/baseline.json``.
+
+CI runners and developer machines differ in absolute speed, so the gate
+compares *normalized* times: every FP/BP kernel row is divided by a
+calibration row measured in the same run *and executed through the same
+stack* — jitted rows (``cpu-jit`` derived tag) normalize by the jnp-oracle
+parallel FP, interpret-mode/TPU Pallas rows by the Pallas parallel FP —
+cancelling both machine speed and the machine-dependent interpreter-vs-XLA
+ratio to first order.  A row is a regression when
+
+    (fresh_us / fresh_cal) > FAIL_RATIO * baseline_norm
+
+and a *missing* row (present in the baseline, absent from the fresh CSV) is
+an API-drift failure — a renamed entry point or a bench that stopped running
+is exactly what this gate exists to catch.  Ratios between WARN_RATIO and
+FAIL_RATIO print as warnings only (CPU noise on shared runners).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run --only kernels > fresh.csv
+    python -m benchmarks.check_regression fresh.csv              # gate
+    python -m benchmarks.check_regression fresh.csv --write-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+from typing import Dict, Tuple
+
+BASELINE = pathlib.Path(__file__).resolve().parent / "baseline.json"
+# Per-stack calibration rows: jitted rows drift with XLA/CPU speed, Pallas
+# rows (interpret mode on CI) with Python-interpreter speed — normalizing
+# each class by its own calibration row keeps the ratios machine-portable.
+CAL_JIT = "kernel/fp_par_sf/jnp_oracle"
+CAL_PALLAS = "kernel/fp_par_sf/pallas"
+GATE = re.compile(r"^kernel/(fp|bp)")
+FAIL_RATIO = 1.5
+WARN_RATIO = 1.15
+
+
+def parse_csv(path: str) -> Dict[str, Tuple[float, str]]:
+    """``name,us_per_call,derived`` rows (the benchmarks.run contract) as
+    ``{name: (us, derived)}``; error sentinels (us < 0) are dropped so they
+    register as missing."""
+    rows: Dict[str, Tuple[float, str]] = {}
+    for line in pathlib.Path(path).read_text().splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2 or parts[0] == "name":
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        if us > 0:
+            rows[parts[0]] = (us, parts[2] if len(parts) > 2 else "")
+    return rows
+
+
+def _norm(fresh: Dict[str, Tuple[float, str]], name: str) -> float:
+    us, derived = fresh[name]
+    cal = CAL_JIT if derived.startswith("cpu-jit") else CAL_PALLAS
+    return us / fresh[cal][0]
+
+
+def write_baseline(fresh: Dict[str, Tuple[float, str]],
+                   path: pathlib.Path) -> None:
+    entries = {
+        name: {"norm": round(_norm(fresh, name), 4), "us": round(us, 1)}
+        for name, (us, _) in sorted(fresh.items()) if GATE.match(name)
+    }
+    payload = {
+        "_meta": {
+            "calibration_rows": {"cpu-jit": CAL_JIT, "pallas": CAL_PALLAS},
+            "fail_ratio": FAIL_RATIO,
+            "note": "norm = us / us(same-stack calibration row), same run; "
+                    "regenerate with check_regression --write-baseline",
+        },
+        "rows": entries,
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {path} ({len(entries)} gated rows)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("csv", help="fresh bench_kernels CSV to check")
+    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from the CSV instead")
+    args = ap.parse_args()
+
+    fresh = parse_csv(args.csv)
+    for cal in (CAL_JIT, CAL_PALLAS):
+        if cal not in fresh:
+            print(f"FAIL: calibration row {cal!r} missing from {args.csv}")
+            return 1
+    if args.write_baseline:
+        write_baseline(fresh, pathlib.Path(args.baseline))
+        return 0
+
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())["rows"]
+    fails, warns = [], []
+    for name, entry in baseline.items():
+        if name not in fresh:
+            fails.append(f"{name}: missing from fresh run (API drift?)")
+            continue
+        norm = _norm(fresh, name)
+        ratio = norm / entry["norm"]
+        line = (f"{name}: {ratio:.2f}x baseline "
+                f"(norm {norm:.3f} vs {entry['norm']:.3f})")
+        if ratio > FAIL_RATIO:
+            fails.append(line)
+        elif ratio > WARN_RATIO:
+            warns.append(line)
+    for name in sorted(set(fresh) - set(baseline)):
+        if GATE.match(name):
+            warns.append(f"{name}: new row not in baseline "
+                         f"(regenerate with --write-baseline)")
+
+    for w in warns:
+        print(f"WARN: {w}")
+    for f in fails:
+        print(f"FAIL: {f}")
+    if fails:
+        print(f"{len(fails)} regression(s) > {FAIL_RATIO}x — if intentional, "
+              f"regenerate benchmarks/baseline.json with --write-baseline")
+        return 1
+    print(f"benchmark gate OK ({len(baseline)} rows checked, "
+          f"{len(warns)} warnings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,11 @@ import importlib
 
 from repro.models.config import ModelConfig, MoEConfig, SSMConfig
 
+# Re-exported alongside the registry so callers can type against the config
+# dataclasses without reaching into repro.models.config.
+__all__ = ["ARCHS", "ModelConfig", "MoEConfig", "SSMConfig", "get",
+           "get_smoke"]
+
 ARCHS = [
     "falcon_mamba_7b", "tinyllama_1_1b", "qwen3_0_6b", "nemotron_4_340b",
     "starcoder2_3b", "grok_1_314b", "olmoe_1b_7b", "hymba_1_5b",

@@ -22,7 +22,6 @@ tests/test_distributed_ct.py).
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Optional
 

@@ -11,7 +11,10 @@ into any training/inference pipeline.
     >>> loss = proj.data_consistency(volume, measured)   # ||Ax - y||^2 term
 
 Batched inputs (leading dims) are supported; gradients flow through every
-method via the matched custom_vjp pairs in ``repro.kernels.ops``.
+method via the matched custom_vjp pairs in ``repro.kernels.ops``.  On the
+Pallas backend every geometry (parallel, fan, cone) runs a kernel matched
+pair — the backprojection (and therefore every gradient) is the exact
+transpose of the forward kernel, never a fallback adjoint.
 """
 from __future__ import annotations
 

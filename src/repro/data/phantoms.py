@@ -15,7 +15,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.geometry import CTGeometry, VolumeGeometry
+from repro.core.geometry import VolumeGeometry
 
 
 @dataclasses.dataclass(frozen=True)

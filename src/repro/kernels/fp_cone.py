@@ -15,15 +15,26 @@ specifics:
   matvec — this is the per-element axial resample that makes cone beams
   non-separable on TPU (DESIGN.md §2).
 
-Backprojection pairs with the jnp adjoint (exact transpose of the same math
-— ``ref.adjoint``), so the registered pair stays matched.
+Backprojection (``bp_cone_sf_pallas``) is the *exact transpose* of the
+forward kernel, so the registered pair is matched on-kernel end to end:
+
+* transaxial: the same corner-projected trapezoid breakpoints
+  (``_corner_trapezoid``, shared between FP/BP and the fan kernels),
+  contracted in the transposed direction — a (BG, Wu) weight tile against a
+  (Wu, BV) sinogram window gathered with a scalar-prefetched ``pl.ds``;
+* axial: the per-element rect-overlap matvec runs in the adjoint direction —
+  each gathered element's (BV, nz) overlap matrix maps its u-contracted
+  detector rows back onto the volume's z lanes on the MXU.
+
+``bp_cone_sf_ref`` (the jnp-oracle adjoint) is kept as the cross-check
+oracle for ``tests/test_kernels.py``.
 
 Batching: the per-lane axial resample depends on the actual detector-row
 coordinate of each lane, so batch cannot be packed into the 128-wide axis the
 way the parallel kernel does.  Instead a leading batch dimension is folded
-into the *view* grid axis — the per-view parameter table is tiled per sample
-and the volume input is stacked along the gathered axis, so one
-``pallas_call`` covers the whole batch (no vmap over the kernel).
+into the *view* grid axis (FP) / the *gathered-output* grid axis (BP) — the
+per-view parameter table stays shared across samples, so one ``pallas_call``
+covers the whole batch (no vmap over the kernel).
 
 Tile sizes come from :mod:`repro.kernels.tune` (``KernelConfig``).
 """
@@ -44,12 +55,73 @@ from repro.kernels import ref, tune
 from repro.kernels.footprint import trapezoid_pixel_weight
 
 
+_EPS = 1e-9
+
+
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
 def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
+
+
+def _mag_bounds(geom: CTGeometry) -> Tuple[float, float]:
+    """(mag_min, mag_max) transaxial magnification over the volume disk."""
+    r = geom.vol.radius
+    mag_max = geom.sdd / max(geom.sod - r, 1e-3)
+    mag_min = geom.sdd / (geom.sod + r)
+    return mag_min, mag_max
+
+
+def _u_window_size_div(geom: CTGeometry, bg: int, nu: int) -> int:
+    """Static bound on the detector-column window covering one bg voxel tile
+    for a *divergent* (fan / cone transaxial) beam (BP kernels).
+    |duc/dgi| <= sqrt(2) * dx * mag_max and one voxel footprint spans
+    <= sqrt(2) * dx * mag_max; curved (fan) footprints are never wider."""
+    du, dx = geom.pixel_width, geom.vol.dx
+    _, mag_max = _mag_bounds(geom)
+    span = bg * dx * math.sqrt(2.0) * mag_max / du
+    margin = 2.0 * math.sqrt(2.0) * dx * mag_max / du + 4.0
+    w = int(math.ceil(span + 2 * margin)) + 2
+    return min(_round_up(max(w, 8), 8), nu)
+
+
+def _corner_trapezoid(P, gi, q0, l0, lif, sdd, dxv, curved: bool = False):
+    """Corner-projection trapezoid breakpoints + amplitude + squared
+    transaxial ray length for gathered indices ``gi`` (broadcast shape).
+
+    ``P`` is the 20-float per-view parameter row of ``_view_params_cone``.
+    Shared by the cone FP/BP kernels and the fan kernels (``fp_fan.py``) so
+    every evaluation of the same (view, gi, li) triple produces identical
+    weights — the exact-transpose requirement of the matched pair."""
+    Aq, Al = P[0], P[3]
+    q = Aq * gi + q0
+    ell = Al * gi + l0
+    taus = []
+    for k in range(4):
+        dq, dl = P[12 + 2 * k], P[13 + 2 * k]
+        lc = jnp.maximum(ell + dl, _EPS)
+        if curved:
+            taus.append(sdd * jnp.arctan2(q + dq, lc))
+        else:
+            taus.append(sdd * (q + dq) / lc)
+    m1 = jnp.minimum(taus[0], taus[1])
+    M1 = jnp.maximum(taus[0], taus[1])
+    m2 = jnp.minimum(taus[2], taus[3])
+    M2 = jnp.maximum(taus[2], taus[3])
+    t0 = jnp.minimum(m1, m2)
+    t3 = jnp.maximum(M1, M2)
+    ta, tb = jnp.maximum(m1, m2), jnp.minimum(M1, M2)
+    t1 = jnp.minimum(ta, tb)
+    t2 = jnp.maximum(ta, tb)
+    Arx, Brx, Crx, Ary, Bry, Cry = P[6:12]
+    rx = Arx * gi + Brx * lif + Crx
+    ry = Ary * gi + Bry * lif + Cry
+    rt2 = rx * rx + ry * ry
+    h = dxv * jnp.sqrt(rt2) / jnp.maximum(
+        jnp.maximum(jnp.abs(rx), jnp.abs(ry)), _EPS)
+    return t0, t1, t2, t3, h, rt2
 
 
 def _view_params_cone(geom: CTGeometry) -> Tuple[np.ndarray, np.ndarray,
@@ -119,7 +191,7 @@ def _fp_cone_kernel(params_ref,        # SMEM (n_views, 20)
     # stays (n_views, 20) in SMEM and the view index wraps per sample.
     av = jax.lax.rem(a, nav)
     P = [params_ref[av, i] for i in range(20)]
-    (Aq, Bq, Cq, Al, Bl, Cl, Arx, Brx, Crx, Ary, Bry, Cry) = P[:12]
+    Aq, Bq, Cq, Al, Bl, Cl = P[:6]
     lif = li.astype(jnp.float32)
     u_first = u0 + (ub * bu) * du
     u_last = u_first + (bu - 1) * du
@@ -140,33 +212,14 @@ def _fp_cone_kernel(params_ref,        # SMEM (n_views, 20)
 
     gi = start.astype(jnp.float32) + jax.lax.broadcasted_iota(
         jnp.float32, (1, W), 1)                              # (1, W)
-    q = Aq * gi + q0                                         # (1, W)
-    ell = Al * gi + l0
-    ell = jnp.maximum(ell, 1e-9)
-    # corner projections -> sorted trapezoid breakpoints
-    taus = []
-    for k in range(4):
-        dq, dl = P[12 + 2 * k], P[13 + 2 * k]
-        taus.append(sdd * (q + dq) / jnp.maximum(ell + dl, 1e-9))
-    m1 = jnp.minimum(taus[0], taus[1])
-    M1 = jnp.maximum(taus[0], taus[1])
-    m2 = jnp.minimum(taus[2], taus[3])
-    M2 = jnp.maximum(taus[2], taus[3])
-    t0 = jnp.minimum(m1, m2)
-    t3 = jnp.maximum(M1, M2)
-    ta, tb = jnp.maximum(m1, m2), jnp.minimum(M1, M2)
-    t1 = jnp.minimum(ta, tb)
-    t2 = jnp.maximum(ta, tb)
-    rx = Arx * gi + Brx * lif + Crx
-    ry = Ary * gi + Bry * lif + Cry
-    rt2 = rx * rx + ry * ry
-    h = dxv * jnp.sqrt(rt2) / jnp.maximum(
-        jnp.maximum(jnp.abs(rx), jnp.abs(ry)), 1e-9)         # (1, W)
+    # corner projections -> sorted trapezoid breakpoints (shared with BP)
+    t0, t1, t2, t3, h, rt2 = _corner_trapezoid(P, gi, q0, l0, lif, sdd, dxv)
 
     uk = u_first + du * jax.lax.broadcasted_iota(jnp.float32, (bu, 1), 0)
     el = uk - du / 2.0
     wu = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)  # (bu, W)
 
+    ell = jnp.maximum(Al * gi + l0, _EPS)
     mag = sdd / ell                                          # (1, W)
     v_first = v0 + (vb * bv) * dv
     vlane = v_first + dv * jax.lax.broadcasted_iota(jnp.float32, (bv, 1), 0)
@@ -213,8 +266,7 @@ def _run_group(fb, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
     na = params.shape[0]
     nup = _round_up(geom.n_cols, bu)
     nvp = _round_up(geom.n_rows, bv)
-    mag_max = geom.sdd / max(geom.sod - vol.radius, 1e-3)
-    mag_min = geom.sdd / (geom.sod + vol.radius)
+    mag_min, mag_max = _mag_bounds(geom)
     span = bu * geom.pixel_width * math.sqrt(2.0) / (vol.dx * mag_min)
     margin = 2.0 * (math.sqrt(2.0) * vol.dx * mag_max
                     + geom.pixel_width) / (vol.dx * mag_min) + 4.0
@@ -270,22 +322,190 @@ def fp_cone_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
     return out if batched else out[0]
 
 
+# --------------------------------------------------------------------------- #
+# Backprojection kernel (exact transpose)
+# --------------------------------------------------------------------------- #
+def _bp_cone_kernel(params_ref,        # SMEM (n_views, 20)
+                    q_ref,             # VMEM (bab, NU, bv) u-major sino stripes
+                    out_ref,           # VMEM (bg, 1, nz) volume tile (z lanes)
+                    *, Wu: int, u0: float, du: float, v0: float, dv: float,
+                    z0c: float, dz: float, sdd: float, dxv: float,
+                    nu: int, nz: int, bg: int, bv: int, bab: int, ngb: int):
+    """One program: accumulate ``bab`` views x ``bv`` detector rows into one
+    (bg gathered elements, nz) volume tile — the exact transpose of
+    ``_fp_cone_kernel``:
+
+    * transaxial: the same corner-projected breakpoints, contracted in the
+      transposed direction ((bg, Wu) weights x (Wu, bv) sinogram window);
+    * axial: each gathered element's (bv, nz) rect-overlap matrix (same
+      iota construction as the forward's z-window, evaluated over the full
+      z line since the output lanes *are* z) maps its u-contracted detector
+      rows back onto the volume line via one MXU matvec per element.
+    """
+    gall = pl.program_id(0)
+    li = pl.program_id(1)
+    vb = pl.program_id(2)
+    ab = pl.program_id(3)
+
+    @pl.when((vb == 0) & (ab == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lif = li.astype(jnp.float32)
+    # Batched runs fold the batch into the gathered-output grid axis; the
+    # params table stays (n_views, 20) in SMEM shared across samples.
+    gi0 = jax.lax.rem(gall, ngb) * bg
+    gi_abs = gi0.astype(jnp.float32) + jax.lax.broadcasted_iota(
+        jnp.float32, (bg, 1), 0)                             # (bg, 1)
+    v_first = v0 + (vb * bv) * dv
+    elv = v_first - dv / 2.0 + dv * jax.lax.broadcasted_iota(
+        jnp.float32, (bv, 1), 0)                             # (bv, 1)
+    zt = z0c + dz * jax.lax.broadcasted_iota(jnp.float32, (1, nz), 1)
+
+    acc = jnp.zeros((bg, nz), jnp.float32)
+    for j in range(bab):
+        a = ab * bab + j
+        P = [params_ref[a, i] for i in range(20)]
+        Aq, Bq, Cq, Al, Bl, Cl = P[:6]
+        q0 = Bq * lif + Cq
+        l0 = Bl * lif + Cl
+
+        # window start: center projection u(gi) over the gathered tile
+        def uc_of(gi):
+            qg = Aq * gi + q0
+            lg = jnp.maximum(Al * gi + l0, _EPS)
+            return sdd * qg / lg
+
+        uc_a = uc_of(gi0.astype(jnp.float32))
+        uc_b = uc_of((gi0 + bg - 1).astype(jnp.float32))
+        ustart = jnp.floor(
+            (jnp.minimum(uc_a, uc_b) - u0) / du).astype(jnp.int32) - (
+            Wu - jnp.abs(jnp.ceil((uc_b - uc_a) / du)).astype(jnp.int32)) // 2
+        ustart = jnp.clip(ustart, 0, max(nu - Wu, 0))
+
+        qwin = q_ref[j, pl.ds(ustart, Wu), :]                # (Wu, bv)
+        t0, t1, t2, t3, h, rt2 = _corner_trapezoid(
+            P, gi_abs, q0, l0, lif, sdd, dxv)                # (bg, 1)
+        uk = u0 + (ustart.astype(jnp.float32)
+                   + jax.lax.broadcasted_iota(jnp.float32, (1, Wu), 1)) * du
+        el = uk - du / 2.0                                   # (1, Wu)
+        wgt = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
+        rows = jax.lax.dot_general(wgt, qwin,                # (bg, bv)
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        # Transposed per-element axial resample: every gathered element has
+        # its own magnification, so its bv u-contracted detector rows map
+        # through an element-specific (bv, nz) overlap matrix onto z lanes.
+        zcols = []
+        for g in range(bg):
+            ell_g = jnp.maximum(Al * gi_abs[g, 0] + l0, _EPS)
+            mag_g = sdd / ell_g
+            vlo = (zt - dz / 2.0) * mag_g                    # (1, nz)
+            vhi = (zt + dz / 2.0) * mag_g
+            ov = jnp.maximum(jnp.minimum(vhi, elv + dv)
+                             - jnp.maximum(vlo, elv), 0.0) / dv   # (bv, nz)
+            obl = jnp.sqrt(1.0 + (zt * zt) / jnp.maximum(rt2[g, 0], _EPS))
+            Wz = ov * obl                                    # (bv, nz)
+            zcols.append(jax.lax.dot_general(
+                rows[g][None, :], Wz, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32))         # (1, nz)
+        acc = acc + jnp.concatenate(zcols, axis=0)
+    out_ref[:, 0, :] += acc.astype(out_ref.dtype)
+
+
+def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
+                  bg: int, bv: int, bab: int):
+    """q: (B, na_group, n_cols, n_rows) u-major sino slice for this view
+    group.  The batch is folded into the gathered-output grid axis (the
+    transpose of the FP's view-axis folding).  Returns the gathered-axis-
+    major volume accumulator (B, NG, NL, nz)."""
+    vol = geom.vol
+    ng, nl = (vol.nx, vol.ny) if gathered_x else (vol.ny, vol.nx)
+    nz = vol.nz
+    B, na, nu_, nv_ = q.shape
+    bab = max(1, min(bab, na))
+    nap = _round_up(na, bab)
+    if nap != na:
+        params = np.concatenate([params, np.repeat(params[-1:],
+                                                   nap - na, 0)], 0)
+        q = jnp.pad(q, ((0, 0), (0, nap - na), (0, 0), (0, 0)))
+    nvp = _round_up(nv_, bv)
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, nvp - nv_)))
+    qs = q.reshape(B * nap, nu_, nvp)
+    ngp = _round_up(ng, bg)
+    ngb, nab = ngp // bg, nap // bab
+    Wu = _u_window_size_div(geom, bg, nu_)
+    kernel = functools.partial(
+        _bp_cone_kernel, Wu=Wu,
+        u0=float(geom.u_coords()[0]), du=geom.pixel_width,
+        v0=float(geom.v_coords()[0]), dv=geom.pixel_height,
+        z0c=float(vol.z_coords()[0]), dz=vol.dz, sdd=geom.sdd, dxv=vol.dx,
+        nu=nu_, nz=nz, bg=bg, bv=bv, bab=bab, ngb=ngb)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B * ngb, nl, nvp // bv, nab),
+            in_specs=[pl.BlockSpec((bab, nu_, bv),
+                                   lambda gall, l, vb, ab, *_:
+                                   (gall // ngb * nab + ab, 0, vb))],
+            out_specs=pl.BlockSpec((bg, 1, nz),
+                                   lambda gall, l, vb, ab, *_: (gall, l, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * ngp, nl, nz), qs.dtype),
+        interpret=_interpret(),
+    )(jnp.asarray(params), qs)
+    return out.reshape(B, ngp, nl, nz)[:, :ng]
+
+
+def bp_cone_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
+                      bv: Optional[int] = None, bab: Optional[int] = None,
+                      config: Optional[tune.KernelConfig] = None):
+    """sino: (n_angles, n_rows, n_cols) -> volume (nx, ny, nz), or batched
+    sino: (batch, ...) -> (batch, nx, ny, nz).  Flat detector.
+
+    Exact transpose of ``fp_cone_sf_pallas`` (incl. the batched path): same
+    corner-projection trapezoid via the transposed contraction, and the
+    per-element axial rect-overlap matvec applied in the adjoint direction
+    (detector rows -> volume z lanes)."""
+    assert geom.geom_type == "cone" and geom.detector_type == "flat"
+    if sino.ndim not in (3, 4):
+        raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
+    batched = sino.ndim == 4
+    qb = sino if batched else sino[None]
+    cfg = tune.resolve_config(geom, qb.shape[0], config, dtype=sino.dtype,
+                              bg=bg, bv=bv, bab=bab)
+    px, py, order = _view_params_cone(geom)
+    q = jnp.swapaxes(qb, 2, 3)                             # (B, na, nu, nv)
+    q = q[:, order]                                        # group-major views
+    nax = px.shape[0]
+    acc = jnp.zeros((qb.shape[0],) + geom.vol.shape, q.dtype)
+    if nax:
+        acc = acc + _run_bp_group(q[:, :nax], px, geom, True,
+                                  cfg.bg, cfg.bv, cfg.bab)
+    if py.shape[0]:
+        accy = _run_bp_group(q[:, nax:], py, geom, False,
+                             cfg.bg, cfg.bv, cfg.bab)
+        acc = acc + jnp.swapaxes(accy, 1, 2)
+    return acc if batched else acc[0]
+
+
 def bp_cone_sf_ref(sino, geom: CTGeometry,
                    config: Optional[tune.KernelConfig] = None):
-    """Matched adjoint via the jnp oracle (exact transpose of the same
-    footprint math; the Pallas bp kernel mirrors fp and is future work —
-    see ROADMAP.md)."""
+    """Adjoint via the jnp oracle (exact transpose of the oracle forward).
+    Kept as the cross-check oracle for the Pallas BP kernel; the registered
+    pair uses ``bp_cone_sf_pallas``."""
     return ref.adjoint(sino, geom, "sf")
 
 
 def bp_cone_sf_ref_batched(sino, geom: CTGeometry,
                            config: Optional[tune.KernelConfig] = None):
-    """Batched matched adjoint (vmap over the jnp oracle)."""
+    """Batched oracle adjoint (vmap over the jnp oracle)."""
     return jax.vmap(lambda q: ref.adjoint(q, geom, "sf"))(sino)
 
 
 def register():
     from repro.kernels import ops
-    ops.register_kernel("cone", "sf", fp_cone_sf_pallas, bp_cone_sf_ref,
+    ops.register_kernel("cone", "sf", fp_cone_sf_pallas, bp_cone_sf_pallas,
                         fp_batched=fp_cone_sf_pallas,
-                        bp_batched=bp_cone_sf_ref_batched)
+                        bp_batched=bp_cone_sf_pallas)

@@ -22,8 +22,9 @@ Detector models (``geom.detector_type``):
 
 Both kernels share the weight math; the backprojector is the exact
 transpose of the forward (same corner-projected breakpoints, transposed
-contraction), so the registered pair is *matched* in the paper's sense —
-unlike the cone pair, fan training steps stay on-kernel end to end.
+contraction), so the registered pair is *matched* in the paper's sense and
+fan training steps stay on-kernel end to end (as do cone steps, whose BP in
+``fp_cone.py`` transposes the per-element axial resample as well).
 
 Tile/block sizes come from :mod:`repro.kernels.tune` (``KernelConfig``).
 """
@@ -42,18 +43,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.geometry import CTGeometry
 from repro.kernels import tune
 from repro.kernels.footprint import trapezoid_pixel_weight
-from repro.kernels.fp_cone import _view_params_cone
+from repro.kernels.fp_cone import (_corner_trapezoid, _mag_bounds,
+                                   _u_window_size_div, _view_params_cone)
 from repro.kernels.fp_par import _interpret, _pad_views, _round_up
 from repro.kernels.ref import _z_overlap_matrix
 
 _EPS = 1e-9
-
-
-def _mag_bounds(geom: CTGeometry):
-    r = geom.vol.radius
-    mag_max = geom.sdd / max(geom.sod - r, 1e-3)
-    mag_min = geom.sdd / (geom.sod + r)
-    return mag_min, mag_max
 
 
 def _curved_stretch(geom: CTGeometry) -> float:
@@ -78,48 +73,15 @@ def _window_size_fan(geom: CTGeometry, bu: int, ng: int) -> int:
     return min(_round_up(max(w, 8), 8), ng)
 
 
-def _u_window_size_fan(geom: CTGeometry, bg: int, nup: int) -> int:
-    """Static bound on the detector-column window covering one bg voxel tile
-    (BP).  |duc/dgi| <= sqrt(2) * dx * mag_max and one voxel footprint spans
-    <= sqrt(2) * dx * mag_max; curved footprints are never wider."""
-    du, dx = geom.pixel_width, geom.vol.dx
-    _, mag_max = _mag_bounds(geom)
-    span = bg * dx * math.sqrt(2.0) * mag_max / du
-    margin = 2.0 * math.sqrt(2.0) * dx * mag_max / du + 4.0
-    w = int(math.ceil(span + 2 * margin)) + 2
-    return min(_round_up(max(w, 8), 8), nup)
-
-
 def _fan_trapezoid(P, gi, q0, l0, lif, sdd, dxv, curved):
     """Shared weight math (used by FP and BP identically, so the pair is an
     exact transpose): corner-projected trapezoid breakpoints + amplitude for
-    gathered indices ``gi`` (broadcast shape).  ``P`` is the 20-float
-    per-view parameter row of ``fp_cone._view_params_cone``."""
-    Aq, Al = P[0], P[3]
-    q = Aq * gi + q0
-    ell = Al * gi + l0
-    taus = []
-    for k in range(4):
-        dq, dl = P[12 + 2 * k], P[13 + 2 * k]
-        lc = jnp.maximum(ell + dl, _EPS)
-        if curved:
-            taus.append(sdd * jnp.arctan2(q + dq, lc))
-        else:
-            taus.append(sdd * (q + dq) / lc)
-    m1 = jnp.minimum(taus[0], taus[1])
-    M1 = jnp.maximum(taus[0], taus[1])
-    m2 = jnp.minimum(taus[2], taus[3])
-    M2 = jnp.maximum(taus[2], taus[3])
-    t0 = jnp.minimum(m1, m2)
-    t3 = jnp.maximum(M1, M2)
-    ta, tb = jnp.maximum(m1, m2), jnp.minimum(M1, M2)
-    t1 = jnp.minimum(ta, tb)
-    t2 = jnp.maximum(ta, tb)
-    Arx, Brx, Crx, Ary, Bry, Cry = P[6:12]
-    rx = Arx * gi + Brx * lif + Crx
-    ry = Ary * gi + Bry * lif + Cry
-    h = dxv * jnp.sqrt(rx * rx + ry * ry) / jnp.maximum(
-        jnp.maximum(jnp.abs(rx), jnp.abs(ry)), _EPS)
+    gathered indices ``gi`` (broadcast shape).  Thin wrapper over the cone
+    kernels' ``_corner_trapezoid`` (``P`` is the 20-float per-view parameter
+    row of ``fp_cone._view_params_cone``); fan drops the squared ray length
+    used by the cone axial obliquity."""
+    t0, t1, t2, t3, h, _rt2 = _corner_trapezoid(P, gi, q0, l0, lif, sdd,
+                                                dxv, curved)
     return t0, t1, t2, t3, h
 
 
@@ -330,7 +292,7 @@ def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
     params, q, bab = _pad_views(params, bab, q)
     nap = params.shape[0]
     ngp = _round_up(ng, bg)
-    Wu = _u_window_size_fan(geom, bg, nup)
+    Wu = _u_window_size_div(geom, bg, nup)
     grid = (ngp // bg, nl, nvp // bv, nap // bab)
     kernel = functools.partial(
         _bp_fan_kernel, Wu=Wu, u0=float(geom.u_coords()[0]),

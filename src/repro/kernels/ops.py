@@ -12,6 +12,9 @@ vice versa, so autodiff never differentiates through the projector internals.
 Backends:
     * ``ref``    — pure-jnp oracles (runs everywhere; the CPU path).
     * ``pallas`` — Pallas TPU kernels (``interpret=True`` on CPU for tests).
+      Parallel, fan, and cone SF pairs are all Pallas matched pairs — each
+      registered BP is the exact transpose of its FP kernel, so training
+      steps stay on-kernel end to end for every geometry.
     * ``auto``   — pallas for geometry/model pairs with a kernel, else ref.
 
 Batching: kernels may register *batched* variants that fold a leading batch

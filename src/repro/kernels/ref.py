@@ -5,7 +5,8 @@ X-ray transform for every geometry x model combination the library supports.
 They serve three roles:
 
 1. Oracle for the Pallas TPU kernels (``tests/test_kernels.py`` asserts
-   allclose against these across shape/dtype sweeps).
+   allclose against these across shape/dtype sweeps — ``forward`` for the
+   FP kernels, ``adjoint`` for the Pallas backprojectors).
 2. CPU fallback backend (this is what actually executes in this container).
 3. Source of *matched adjoints*: backprojection is obtained with
    ``jax.linear_transpose`` of the forward map, which is the exact transpose
@@ -22,8 +23,6 @@ are linear in ``f``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -91,7 +90,6 @@ def fp_parallel_joseph(f, geom: CTGeometry):
     def one_angle(_, ang):
         c, s = jnp.cos(ang), jnp.sin(ang)
         drive_x = jnp.abs(c) >= jnp.abs(s)
-        cs = jnp.where(drive_x, c, s)                # safe denominator
         # --- drive along x: y = x tan + u / cos
         ypos = xs[:, None] * (s / jnp.where(drive_x, c, 1.0)) \
             + us[None, :] / jnp.where(drive_x, c, 1.0)          # (nx, nu)

@@ -26,12 +26,20 @@ sweep serves every geometry of the same regime (e.g. all 2D limited-angle
 training shapes share an entry).  ``KernelConfig`` is frozen/hashable and is
 part of the op-cache key in ``repro.kernels.ops`` — passing the same config
 therefore reuses the cached (traced) ops instead of retracing.
+
+Measured autotune results additionally persist to disk
+(``~/.cache/repro/tune.json``, override the path with
+``REPRO_TUNE_CACHE_PATH``), keyed by shape class + jax backend, so servers
+skip the warmup sweep on restart.  ``REPRO_TUNE_CACHE=0`` disables the disk
+cache entirely (reads and writes).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import os
+import pathlib
 import time
 from typing import Dict, Iterable, Optional, Tuple
 
@@ -48,6 +56,9 @@ __all__ = [
     "register_config",
     "autotune",
     "clear",
+    "cache_path",
+    "save_tuned",
+    "load_tuned",
 ]
 
 LANE = 128          # TPU lane width: the bv axis should be a multiple of this
@@ -87,6 +98,10 @@ def _bucket(n: int) -> int:
     return 1 << max(0, int(n - 1).bit_length())
 
 
+def _round_up8(n: int) -> int:
+    return ((n + _SUBLANE - 1) // _SUBLANE) * _SUBLANE
+
+
 def shape_class(geom: CTGeometry, batch: int = 1,
                 dtype=jnp.float32) -> Tuple:
     """Coarse key identifying a kernel-tuning regime.
@@ -119,8 +134,91 @@ def register_config(cls_key: Tuple, cfg: KernelConfig) -> None:
 
 
 def clear() -> None:
+    """Drop the in-process registries (the disk cache is left untouched)."""
     _REGISTRY.clear()
     _AUTOTUNED.clear()
+
+
+# --------------------------------------------------------------------------- #
+# Disk persistence (measured autotune results survive process restarts)
+# --------------------------------------------------------------------------- #
+def _disk_cache_enabled() -> bool:
+    val = os.environ.get("REPRO_TUNE_CACHE", "1").strip().lower()
+    return val not in ("", "0", "false", "no", "off")
+
+
+def cache_path() -> pathlib.Path:
+    """Location of the persisted tune cache (``REPRO_TUNE_CACHE_PATH`` or
+    ``~/.cache/repro/tune.json``)."""
+    p = os.environ.get("REPRO_TUNE_CACHE_PATH")
+    if p:
+        return pathlib.Path(p)
+    return pathlib.Path.home() / ".cache" / "repro" / "tune.json"
+
+
+def _disk_key(cls_key: Tuple) -> str:
+    # Shape classes are flat tuples of strs/ints; the backend suffix keeps
+    # TPU-measured configs from leaking onto other backends (and vice versa).
+    return "|".join(str(x) for x in cls_key) + "@" + jax.default_backend()
+
+
+def save_tuned(cls_key: Tuple, cfg: KernelConfig) -> None:
+    """Best-effort persist of a measured config (no-op when disabled)."""
+    if not _disk_cache_enabled():
+        return
+    path = cache_path()
+    try:
+        data = json.loads(path.read_text()) if path.exists() else {}
+        if not isinstance(data, dict):
+            data = {}
+    except (OSError, ValueError):
+        data = {}
+    data[_disk_key(cls_key)] = dataclasses.asdict(cfg)
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_name(path.name + ".tmp")
+        tmp.write_text(json.dumps(data, indent=2, sort_keys=True))
+        os.replace(tmp, path)                     # atomic vs concurrent readers
+    except OSError:
+        pass                                      # cache is best-effort only
+
+
+# Parsed-file memo keyed by (path, mtime_ns): get_config consults the disk
+# cache on every registry miss, and without this every eager kernel call
+# would re-read + re-parse the JSON file.  A save (here or by another
+# process) bumps the mtime and invalidates the memo; a stat per call remains.
+_DISK_MEMO: Dict[Tuple[str, int], dict] = {}
+
+
+def _read_disk_cache() -> dict:
+    path = cache_path()
+    try:
+        mtime = path.stat().st_mtime_ns
+    except OSError:
+        return {}
+    memo_key = (str(path), mtime)
+    if memo_key not in _DISK_MEMO:
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, ValueError):
+            data = {}
+        _DISK_MEMO.clear()                    # keep exactly one file cached
+        _DISK_MEMO[memo_key] = data if isinstance(data, dict) else {}
+    return _DISK_MEMO[memo_key]
+
+
+def load_tuned(cls_key: Tuple) -> Optional[KernelConfig]:
+    """Read a persisted config for this shape class + backend, or None."""
+    if not _disk_cache_enabled():
+        return None
+    data = _read_disk_cache()
+    raw = data.get(_disk_key(cls_key))
+    if not isinstance(raw, dict):
+        return None
+    try:
+        return KernelConfig(**{k: int(v) for k, v in raw.items()})
+    except (TypeError, ValueError):
+        return None                               # stale/foreign schema
 
 
 def _on_tpu() -> bool:
@@ -143,10 +241,15 @@ def heuristic_config(geom: CTGeometry, batch: int = 1,
     # enough that the gathered-axis window (which grows ~linearly in bu)
     # stays comfortably inside VMEM.
     bu = 8 if nu <= 16 else (16 if nu <= 512 else 32)
+    bv = LANE
     if geom.geom_type == "cone":
         # The cone kernel's gathered-axis window W grows with bu and is
         # walked by an inner loop — keep the column tile small.
         bu = 8
+        # Cone kernels tile *physical* detector rows on the v axis (no lane
+        # packing; the BP's lane axis is z) — pad rows to the sublane
+        # multiple instead of a full 128-lane tile.
+        bv = min(_round_up8(max(geom.n_rows, 1)), LANE)
     elif geom.geom_type == "fan":
         # Fan is lane-packed like parallel, but its gathered-axis window is
         # magnified by sdd/(sod - R) — halve the column tile so the W-wide
@@ -163,7 +266,7 @@ def heuristic_config(geom: CTGeometry, batch: int = 1,
         # programs minimal so correctness tests stay fast.
         ba = 1
         bab = 1
-    return KernelConfig(bu=bu, bv=LANE, ba=ba, bg=bg, bab=bab)
+    return KernelConfig(bu=bu, bv=bv, ba=ba, bg=bg, bab=bab)
 
 
 def get_config(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
@@ -174,6 +277,10 @@ def get_config(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
         return _REGISTRY[key]
     if key in _AUTOTUNED:
         return _AUTOTUNED[key]
+    disk = load_tuned(key)
+    if disk is not None:                  # persisted measurement: skip sweep
+        _AUTOTUNED[key] = disk
+        return disk
     if _on_tpu() and _autotune_enabled(autotune_flag):
         return autotune(geom, batch=batch, dtype=dtype)
     return heuristic_config(geom, batch, dtype)
@@ -238,8 +345,8 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
     cand = list(candidates) if candidates is not None \
         else list(default_candidates(geom))
     if geom.geom_type == "cone":
-        # The cone pair is Pallas-forward only; sweep the cone FP column
-        # tile and keep heuristic BP blocks (ref adjoint).
+        # Cone has no FP view-blocking knob (views fold into the grid) but
+        # a full Pallas BP: sweep the FP column tile and the BP (bg, bab).
         return _autotune_cone(geom, batch, dtype, cand, reps, key)
     if geom.geom_type == "fan":
         # Fan is Pallas end to end like parallel: same full fp/bp sweep.
@@ -288,15 +395,22 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
         bg=best_bp[0] if best_bp else heur.bg,
         bab=best_bp[1] if best_bp else heur.bab)
     _AUTOTUNED[key] = cfg
+    save_tuned(key, cfg)
     return cfg
 
 
 def _autotune_cone(geom: CTGeometry, batch: int, dtype, cand, reps: int,
                    key: Tuple) -> KernelConfig:
+    """Cone sweep: FP column tile (bu) + BP gathered tile / view block
+    (bg, bab), mirroring the fan/parallel sweep now that the cone BP is a
+    real Pallas kernel.  The row tile bv stays on the heuristic (it tiles
+    physical detector rows, whose count the shape class already encodes)."""
     from repro.kernels import fp_cone
     base = heuristic_config(geom, batch, dtype)
     shape = ((batch,) if batch > 1 else ()) + geom.vol.shape
     f = jnp.ones(shape, dtype)
+    sshape = ((batch,) if batch > 1 else ()) + geom.sino_shape
+    y = jnp.ones(sshape, dtype)
     best_bu, t_best = base.bu, float("inf")
     for bu in sorted({c.bu for c in cand}):
         cfg = base.replace(bu=bu, ba=1)
@@ -307,6 +421,19 @@ def _autotune_cone(geom: CTGeometry, batch: int, dtype, cand, reps: int,
             continue
         if t < t_best:
             best_bu, t_best = bu, t
-    cfg = base.replace(bu=best_bu, ba=1)
+    best_bp, t_bp = None, float("inf")
+    for bg, bab in sorted({(c.bg, c.bab) for c in cand}):
+        cfg = base.replace(bg=bg, bab=bab)
+        try:
+            t = _time_call(lambda p: fp_cone.bp_cone_sf_pallas(
+                p, geom, config=cfg), y, reps=reps)
+        except Exception:                             # noqa: BLE001
+            continue
+        if t < t_bp:
+            best_bp, t_bp = (bg, bab), t
+    cfg = base.replace(bu=best_bu, ba=1,
+                       bg=best_bp[0] if best_bp else base.bg,
+                       bab=best_bp[1] if best_bp else base.bab)
     _AUTOTUNED[key] = cfg
+    save_tuned(key, cfg)
     return cfg

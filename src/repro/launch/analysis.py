@@ -15,7 +15,6 @@ per-device.  dtypes: compute bf16(2B), params/optimizer fp32(4B).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.launch.shapes import ShapeSpec
@@ -189,7 +188,6 @@ def train_collective_bytes(cfg: ModelConfig, shape: ShapeSpec,
     T = B * S
     d = cfg.d_model
     P = cfg.n_params()
-    n_chips = tp * dp
     coll = 0.0
     if tp > 1 and cfg.grad_accum >= 0:
         ar = 2.0 * (tp - 1) / tp

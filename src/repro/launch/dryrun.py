@@ -25,7 +25,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.launch import roofline, sharding, shapes as SH

@@ -27,10 +27,9 @@ ops.  Two accounting subtleties, both handled here:
 from __future__ import annotations
 
 import json
-import math
 import os
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # B/s per chip

@@ -2,8 +2,7 @@
 the smoke tests and the multi-pod dry-run)."""
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +69,6 @@ def make_prefill_step(cfg: ModelConfig, ac: Callable = None):
         x, _ = MD.forward(cfg, params, batch["tokens"],
                           batch.get("vision_embeds"), batch.get("positions"),
                           ac)
-        from repro.models.layers import rms_norm  # final norm already applied
         lg = MD.logits_fn(cfg, params, x[:, -1:])
         return lg[:, 0]
 

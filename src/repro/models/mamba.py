@@ -14,7 +14,6 @@ Decode path: O(1) per token (the whole point of SSMs for long context).
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -98,8 +97,6 @@ def mamba_train(params, x, cfg: ModelConfig, chunk: int = 512):
 def mamba_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
     """One-token decode.  x: (B, 1, d); conv_state (B, K-1, di);
     ssm_state (B, di, N).  Returns (y (B,1,d), conv_state, ssm_state)."""
-    B = x.shape[0]
-    K = cfg.ssm.d_conv
     xz = x @ params["in_proj"]
     xs, z = jnp.split(xz, 2, axis=-1)                        # (B,1,di)
     hist = jnp.concatenate([conv_state, xs], axis=1)         # (B,K,di)

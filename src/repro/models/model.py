@@ -17,7 +17,7 @@ the scan as a per-layer boolean.
 from __future__ import annotations
 
 import math
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -126,7 +126,6 @@ def _cast_layer(lp, dtype):
 
 def _block_train(cfg: ModelConfig, params, x, positions, is_global, ac):
     params = _cast_layer(params, jnp.dtype(cfg.compute_dtype))
-    d = x.shape[-1]
     if cfg.family == "ssm":
         h = L.rms_norm(x, params["ssm"]["ln"], cfg.norm_eps)
         x = x + ac(M.mamba_train(params["ssm"], h, cfg))

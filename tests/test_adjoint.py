@@ -14,7 +14,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Projector, VolumeGeometry, cone_beam, fan_beam,
-                        modular_beam, parallel_beam)
+                        parallel_beam)
 from repro.core.geometry import cone_as_modular
 
 
@@ -49,6 +49,40 @@ def test_cone_curved_matched():
     g = cone_beam(8, 12, 36, v, sod=120.0, sdd=240.0, pixel_width=2.0,
                   pixel_height=2.0, detector_type="curved")
     _dot_test(Projector(g, "joseph"))
+
+
+# Flat-detector cone Pallas matched pair (FP and BP both on-kernel) across
+# cone angles.  The last case has nz far larger than the kernels' axial
+# window NZW, so the z-window genuinely slides (is not clamped to the full
+# volume) — the regime where a mismatched FP/BP windowing would show up.
+CONE_PALLAS_GEOMS = [
+    # nz, n_rows, pixel_height, sod, sdd
+    (8, 12, 2.0, 120.0, 240.0),      # ~11 deg half cone angle
+    (8, 16, 3.0, 80.0, 160.0),       # wide cone (~17 deg)
+    (24, 8, 1.0, 100.0, 150.0),      # tall stack: un-clamped sliding z-window
+]
+
+
+@pytest.mark.parametrize("nz,nv,dv,sod,sdd", CONE_PALLAS_GEOMS)
+def test_cone_pallas_pair_matched_angles(nz, nv, dv, sod, sdd):
+    v = VolumeGeometry(16, 16, nz)
+    g = cone_beam(6, nv, 24, v, sod=sod, sdd=sdd,
+                  pixel_width=2.0, pixel_height=dv)
+    _dot_test(Projector(g, "sf", backend="pallas"))
+
+
+def test_cone_pallas_bp_gradient_is_forward():
+    """grad_y <A^T y, x> == A x on the registered cone Pallas pair — the
+    custom_vjp wiring routes through the new Pallas BP's transpose."""
+    v = VolumeGeometry(16, 16, 8)
+    g = cone_beam(5, 8, 24, v, sod=80.0, sdd=160.0,
+                  pixel_width=2.0, pixel_height=2.0)
+    proj = Projector(g, "sf", backend="pallas")
+    y = jax.random.normal(jax.random.PRNGKey(0), g.sino_shape)
+    x = jax.random.normal(jax.random.PRNGKey(1), v.shape)
+    grad_y = jax.grad(lambda q: jnp.vdot(proj.T(q), x))(y)
+    np.testing.assert_allclose(np.asarray(grad_y), np.asarray(proj(x)),
+                               rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("det", ["flat", "curved"])

@@ -9,7 +9,6 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.launch.mesh import make_local_mesh
 from repro.launch.steps import make_serve_step, make_train_step
 from repro.models import model as MD
 from repro.optim import adamw, constant

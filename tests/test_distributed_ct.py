@@ -46,7 +46,7 @@ def test_distributed_pair_matched(mesh):
 def test_angle_chunking_requires_divisibility(mesh):
     vol = VolumeGeometry(16, 16, 4)
     g = parallel_beam(5, 4, 24, vol)
-    big = jax.make_mesh((1, 1), ("data", "model"))
+    jax.make_mesh((1, 1), ("data", "model"))
     # n_angles=5 divides 1, fine; simulate failure via manual check
     from repro.core.distributed import _angle_chunks
     with pytest.raises(AssertionError):

@@ -71,7 +71,7 @@ def test_fan_windowed_gather_matches_oracle(det):
                  pixel_width=1.0, detector_type=det)
     cfg = KernelConfig(bu=8, bg=8)
     assert fp_fan._window_size_fan(g, cfg.bu, g.vol.nx) < g.vol.nx
-    assert fp_fan._u_window_size_fan(g, cfg.bg, g.n_cols) < g.n_cols
+    assert fp_fan._u_window_size_div(g, cfg.bg, g.n_cols) < g.n_cols
     f = jax.random.normal(jax.random.PRNGKey(0), g.vol.shape)
     y = jax.random.normal(jax.random.PRNGKey(1), g.sino_shape)
     _assert_close(fp_fan_sf_pallas(f, g, config=cfg), ref.forward(f, g, "sf"))

@@ -2,7 +2,7 @@ import numpy as np
 import pytest
 
 from repro.core.geometry import (CTGeometry, VolumeGeometry, cone_beam,
-                                 fan_beam, from_config, modular_beam,
+                                 fan_beam, from_config,
                                  parallel_beam)
 
 

@@ -55,7 +55,7 @@ def test_supervisor_recovers_from_injected_failure(tmp_path):
 def test_dryrun_cell_machinery_local():
     """lower_cell logic on a 1-device mesh with a reduced config — validates
     the sharding/lowering plumbing the 512-device dry-run uses."""
-    from repro.launch import sharding, shapes as SH
+    from repro.launch import sharding
     from repro.launch.steps import make_serve_step, make_train_step
     from repro.models import model as MD
     from repro.optim import adamw, constant

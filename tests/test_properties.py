@@ -11,8 +11,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (Projector, VolumeGeometry, fan_beam, parallel_beam,
-                        cone_beam)
+from repro.core import (Projector, VolumeGeometry, fan_beam, parallel_beam)
 
 # hypothesis strategy over geometry families: parallel + fan (flat/curved)
 GEOM_KINDS = st.sampled_from(["parallel", "fan-flat", "fan-curved"])

@@ -6,8 +6,8 @@ import pytest
 
 from repro.core import Projector, VolumeGeometry, parallel_beam, cone_beam
 from repro.data.phantoms import shepp_logan_2d
-from repro.recon import (cgls, complete_and_refine, data_consistency_refine,
-                         fista_tv, sirt, tv_norm)
+from repro.recon import (cgls, complete_and_refine, fista_tv, sirt,
+                         tv_norm)
 
 
 @pytest.fixture(scope="module")

@@ -1,9 +1,7 @@
 """Runtime substrate: checkpointing, fault handling, compression, pipelines."""
 import os
-import threading
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

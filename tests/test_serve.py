@@ -1,8 +1,5 @@
 """Continuous-batching server: slot recycling, per-slot positions, and
 consistency of served tokens with offline greedy decoding."""
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -13,7 +10,6 @@ from repro.models import model as MD
 
 def _greedy_offline(cfg, params, prompt, max_new):
     cache = MD.init_cache(cfg, 1, 128)
-    tok = None
     out = []
     for t in range(len(prompt) + max_new - 1):
         cur = prompt[t] if t < len(prompt) else out[-1]

@@ -1,14 +1,12 @@
 """Sharding rules + local-mesh integration (1 device: specs must degrade to
 replicated without error; divisibility guards across all 10 archs)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.launch import sharding
-from repro.launch.mesh import (data_axes, dp_size, make_local_mesh,
+from repro.launch.mesh import (dp_size, make_local_mesh,
                                make_production_mesh, tp_size)
 from repro.models import model as MD
 

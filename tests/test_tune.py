@@ -70,6 +70,52 @@ def test_pinned_config_produces_correct_kernels():
 
 
 # --------------------------------------------------------------------------- #
+# Disk persistence (~/.cache/repro/tune.json by default; tests point
+# REPRO_TUNE_CACHE_PATH at tmp via the conftest autouse fixture)
+# --------------------------------------------------------------------------- #
+def test_tune_cache_roundtrip(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE_PATH", str(path))
+    g = _geom()
+    key = tune.shape_class(g)
+    cfg = KernelConfig(bu=32, ba=2, bg=32, bab=2)
+    tune.save_tuned(key, cfg)
+    assert path.exists()
+    assert tune.load_tuned(key) == cfg
+    # a fresh process (cleared in-process registries) picks it up
+    tune.clear()
+    assert tune.get_config(g) == cfg
+    # keyed by shape class: another class misses
+    g2 = parallel_beam(6, 2, 500, VolumeGeometry(16, 16, 2))
+    assert tune.load_tuned(tune.shape_class(g2)) is None
+
+
+def test_tune_cache_escape_hatch(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE_PATH", str(path))
+    monkeypatch.setenv("REPRO_TUNE_CACHE", "0")
+    key = tune.shape_class(_geom())
+    tune.save_tuned(key, KernelConfig(bu=32))
+    assert not path.exists()                   # writes disabled
+    assert tune.load_tuned(key) is None        # reads disabled too
+    cfg = tune.get_config(_geom())             # falls back to heuristics
+    assert cfg == tune.heuristic_config(_geom())
+
+
+def test_tune_cache_corrupt_or_stale_file_ignored(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE_PATH", str(path))
+    key = tune.shape_class(_geom())
+    path.write_text("{not json")
+    assert tune.load_tuned(key) is None
+    # a stale schema (bad field values) is ignored, then overwritten cleanly
+    path.write_text('{"%s": {"bu": "huge"}}' % tune._disk_key(key))
+    assert tune.load_tuned(key) is None
+    tune.save_tuned(key, KernelConfig(bu=16))
+    assert tune.load_tuned(key) == KernelConfig(bu=16)
+
+
+# --------------------------------------------------------------------------- #
 # Op cache: content-keyed, bounded, config round-trip
 # --------------------------------------------------------------------------- #
 def test_ops_cache_content_keyed():
