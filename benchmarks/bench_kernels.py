@@ -21,7 +21,9 @@ import numpy as np
 
 from repro.core import VolumeGeometry, cone_beam, fan_beam, parallel_beam
 from repro.kernels import ref
-from repro.kernels.fp_cone import bp_cone_sf_pallas, fp_cone_sf_pallas
+from repro.kernels.fp_cone import (bp_cone_packed, bp_cone_sf_pallas,
+                                   cone_packed_row_shift, fp_cone_packed,
+                                   fp_cone_sf_pallas)
 from repro.kernels.fp_fan import bp_fan_sf_pallas, fp_fan_sf_pallas
 from repro.kernels.fp_par import bp_parallel_sf_pallas, fp_parallel_sf_pallas
 from repro.kernels.tune import KernelConfig
@@ -170,6 +172,43 @@ def run(csv_rows: list):
     t_bpc = _t(lambda p: bp_cone_sf_pallas(p, gc), yc, reps=reps)
     csv_rows.append(("kernel/bp_cone_sf/pallas", t_bpc * 1e6,
                      f"{mode};bp_over_fp={t_bpc / max(t_fpc, 1e-12):.2f}x"))
+
+    # ---- batched multi-row cone: exact view-folded batch vs lane packing - #
+    # The ROADMAP's last kernel item: the exact cone pair folds batches into
+    # the *grid* (one program per (sample, view)); the packed pair
+    # pre-resamples rows axially and lane-packs batch x n_rows like fan.
+    # The speedup column is the acceptance number for the packed tentpole.
+    from repro.kernels.tune import packed_cone_ok
+    Bc = 4
+    if on_tpu:
+        volp = VolumeGeometry(64, 64, 8)
+        gp = cone_beam(24, 8, 96, volp, sod=1000.0, sdd=2000.0,
+                       pixel_width=2.0, pixel_height=2.0)
+    else:
+        volp = VolumeGeometry(16, 16, 4)
+        gp = cone_beam(4, 4, 24, volp, sod=200.0, sdd=400.0,
+                       pixel_width=2.0, pixel_height=2.0)
+    assert packed_cone_ok(gp), cone_packed_row_shift(gp)  # packed-eligible
+    fp_b = jnp.asarray(np.random.default_rng(9).normal(
+        size=(Bc,) + volp.shape).astype(np.float32))
+    yp_b = jnp.asarray(np.random.default_rng(10).normal(
+        size=(Bc,) + gp.sino_shape).astype(np.float32))
+    t_exact_b = _t(lambda x: fp_cone_sf_pallas(x, gp), fp_b, reps=reps)
+    csv_rows.append((f"kernel/fp_cone3d_b{Bc}/pallas_exact_batched",
+                     t_exact_b * 1e6, mode))
+    t_packed_b = _t(lambda x: fp_cone_packed(x, gp), fp_b, reps=reps)
+    csv_rows.append((f"kernel/fp_cone3d_b{Bc}/pallas_packed",
+                     t_packed_b * 1e6,
+                     f"{mode};speedup_vs_exact="
+                     f"{t_exact_b / max(t_packed_b, 1e-12):.2f}x"))
+    t_bp_exact_b = _t(lambda p: bp_cone_sf_pallas(p, gp), yp_b, reps=reps)
+    csv_rows.append((f"kernel/bp_cone3d_b{Bc}/pallas_exact_batched",
+                     t_bp_exact_b * 1e6, mode))
+    t_bp_packed_b = _t(lambda p: bp_cone_packed(p, gp), yp_b, reps=reps)
+    csv_rows.append((f"kernel/bp_cone3d_b{Bc}/pallas_packed",
+                     t_bp_packed_b * 1e6,
+                     f"{mode};speedup_vs_exact="
+                     f"{t_bp_exact_b / max(t_bp_packed_b, 1e-12):.2f}x"))
 
     # ---- 2D production-ish slice (the paper's 512^2 limited-angle) ------- #
     vol3 = VolumeGeometry(256, 256, 1)

@@ -39,6 +39,12 @@ CAL_PALLAS = "kernel/fp_par_sf/pallas"
 GATE = re.compile(r"^kernel/(fp|bp)")
 FAIL_RATIO = 1.5
 WARN_RATIO = 1.15
+# Sub-millisecond jitted rows are dominated by timer/scheduler jitter, not
+# kernel speed (observed: the ~800us bp_par oracle row spanning 742-2428us
+# across back-to-back idle runs of the same binary).  Rows this small can't
+# carry a meaningful ratio, so they warn instead of failing; the missing-row
+# (API drift) check still applies to them in full.
+JITTER_FLOOR_US = 5000.0
 
 
 def parse_csv(path: str) -> Dict[str, Tuple[float, str]]:
@@ -111,9 +117,11 @@ def main() -> int:
         ratio = norm / entry["norm"]
         line = (f"{name}: {ratio:.2f}x baseline "
                 f"(norm {norm:.3f} vs {entry['norm']:.3f})")
-        if ratio > FAIL_RATIO:
+        tiny = (fresh[name][0] < JITTER_FLOOR_US
+                and entry.get("us", JITTER_FLOOR_US) < JITTER_FLOOR_US)
+        if ratio > FAIL_RATIO and not tiny:
             fails.append(line)
-        elif ratio > WARN_RATIO:
+        elif ratio > WARN_RATIO or (ratio > FAIL_RATIO and tiny):
             warns.append(line)
     for name in sorted(set(fresh) - set(baseline)):
         if GATE.match(name):

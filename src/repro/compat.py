@@ -1,0 +1,87 @@
+"""Version-compatibility shims for drift-prone jax APIs.
+
+The repo pins jax in ``requirements-test.txt`` but must keep working as the
+pin moves (the ``jax-drift`` CI leg runs tier-1 against the latest release).
+Every API that jax has renamed/moved recently — and that previously broke a
+whole test suite with an ``AttributeError`` at call time — is funneled
+through this module so the next rename is a one-line fix here instead of a
+sweep across the tree.
+
+Covered drift:
+
+* ``shard_map`` — promoted from ``jax.experimental.shard_map`` to
+  ``jax.shard_map`` (and its replication-check kwarg renamed
+  ``check_rep`` -> ``check_vma``) in jax 0.6/0.7.
+* ``tree_flatten_with_path`` / ``tree_map_with_path`` — ``jax.tree.*``
+  only grew the ``*_with_path`` variants after 0.4.37; the
+  ``jax.tree_util`` spellings exist on every supported version.
+* ``Compiled.cost_analysis()`` — returned a one-element *list* of dicts
+  up to jax 0.4.x and a plain dict from 0.5; ``cost_analysis_dict``
+  normalizes both to a dict.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.core
+
+__all__ = [
+    "shard_map",
+    "axis_size",
+    "tree_flatten_with_path",
+    "tree_map_with_path",
+    "cost_analysis_dict",
+]
+
+
+# --------------------------------------------------------------------------- #
+# shard_map: jax.experimental.shard_map (<= 0.4/0.5, kwarg check_rep) vs
+# jax.shard_map (>= 0.6, kwarg check_vma).
+# --------------------------------------------------------------------------- #
+def shard_map(f: Callable, mesh, in_specs, out_specs,
+              check_vma: bool = True) -> Callable:
+    """Dispatch to whichever ``shard_map`` this jax ships.
+
+    ``check_vma`` follows the new-jax spelling; it maps onto ``check_rep``
+    on versions that predate the rename (the semantics are identical for
+    our usage: disable the replication/varying-mesh-axes check).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(name) -> int:
+    """Static size of a named mesh axis inside ``shard_map``.
+
+    ``jax.lax.axis_size`` only exists on new jax; older versions expose the
+    same static value through ``jax.core.axis_frame``."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return int(jax.core.axis_frame(name))
+
+
+# --------------------------------------------------------------------------- #
+# tree path helpers: jax.tree_util works everywhere; jax.tree.* only on
+# new jax.
+# --------------------------------------------------------------------------- #
+tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+tree_map_with_path = jax.tree_util.tree_map_with_path
+
+
+# --------------------------------------------------------------------------- #
+# Compiled.cost_analysis(): list-of-dicts (old) vs dict (new).
+# --------------------------------------------------------------------------- #
+def cost_analysis_dict(compiled: Any) -> Dict[str, Any]:
+    """``compiled.cost_analysis()`` normalized to a flat dict (possibly
+    empty — some backends return None)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, dict):
+        return cost
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost and isinstance(cost[0], dict) else {}
+    return {}

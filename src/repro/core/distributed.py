@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.geometry import CTGeometry
 from repro.kernels import ops
 
@@ -44,9 +45,14 @@ def _angle_chunks(geom: CTGeometry, n: int):
 def make_distributed_projector(geom: CTGeometry, mesh: Mesh,
                                model: str = "sf", backend: str = "auto",
                                angle_axis: str = "data",
-                               z_axis: Optional[str] = None):
+                               z_axis: Optional[str] = None,
+                               mode: str = "auto"):
     """Returns (fp, bp) callables operating on a volume sharded
     P(None, None, z_axis) and a sinogram sharded P(angle_axis, z_axis, None).
+
+    ``mode`` is forwarded to ``ops.get_ops`` (cone packed-vs-exact kernel
+    dispatch — pass ``mode="exact"`` to opt out of the approximate packed
+    pair on small-cone-angle geometries).
 
     Implementation: one ``shard_map``; each shard projects its own angle
     chunk of a (possibly z-slab-sharded) volume with the *local* single-
@@ -77,7 +83,7 @@ def make_distributed_projector(geom: CTGeometry, mesh: Mesh,
 
     def _local_ops(angles_row):
         g = lgeom.with_angles(np.asarray(angles_row))
-        return ops.get_ops(g, model, backend)
+        return ops.get_ops(g, model, backend, mode=mode)
 
     # Geometry must be static: build one jitted op per angle chunk and
     # dispatch on the shard index via lax.switch.
@@ -91,14 +97,14 @@ def make_distributed_projector(geom: CTGeometry, mesh: Mesh,
     spec_vol = P(None, None, z_axis)
     spec_sino = P(angle_axis, z_axis, None)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(spec_vol,),
+    @partial(compat.shard_map, mesh=mesh, in_specs=(spec_vol,),
              out_specs=spec_sino, check_vma=False)
     def fp(f_local):
         idx = jax.lax.axis_index(angle_axis)
         sino = jax.lax.switch(idx, local_fps, f_local)
         return sino
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(spec_sino,),
+    @partial(compat.shard_map, mesh=mesh, in_specs=(spec_sino,),
              out_specs=spec_vol, check_vma=False)
     def bp(p_local):
         idx = jax.lax.axis_index(angle_axis)
@@ -124,7 +130,7 @@ def halo_exchange_z(f, axis: str, halo: int):
     (zeros at the fleet edges)."""
     lo = f[:, :, :halo]
     hi = f[:, :, -halo:]
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     idx = jax.lax.axis_index(axis)
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [((i + 1) % n, i) for i in range(n)]

@@ -32,26 +32,37 @@ from repro.kernels.tune import KernelConfig
 class Projector:
     def __init__(self, geom: CTGeometry, model: str = "sf",
                  backend: str = "auto",
-                 config: Optional[KernelConfig] = None):
+                 config: Optional[KernelConfig] = None,
+                 mode: str = "auto"):
+        """``mode`` selects between the exact kernels and the approximate
+        lane-packed cone pair: "exact" always uses the exact kernels,
+        "packed" forces the packed pair (small-cone-angle pre-resample),
+        "auto" (default) uses packed only when the geometry's derived error
+        bound is under tolerance (see ``repro.kernels.tune.packed_cone_ok``).
+        Non-cone geometries are unaffected by ``mode``."""
         if model not in ("sf", "joseph"):
             raise ValueError(f"unknown projector model {model!r}")
+        if mode not in ("auto", "exact", "packed"):
+            raise ValueError(f"unknown mode {mode!r}; expected "
+                             f"'auto', 'exact' or 'packed'")
         if config is not None and not isinstance(config, KernelConfig):
             raise TypeError(f"config must be a KernelConfig, got {config!r}")
         self.geom = geom
         self.model = model if geom.geom_type != "modular" else "joseph"
         self.backend = backend
         self.config = config
+        self.mode = mode
 
     # -- linear ops -------------------------------------------------------- #
     def __call__(self, volume):
         return ops.forward_project(volume, self.geom, self.model,
-                                   self.backend, self.config)
+                                   self.backend, self.config, self.mode)
 
     forward = __call__
 
     def backproject(self, sino):
         return ops.back_project(sino, self.geom, self.model, self.backend,
-                                self.config)
+                                self.config, self.mode)
 
     @property
     def T(self):
@@ -92,5 +103,6 @@ class Projector:
 
     def __repr__(self):
         g = self.geom
-        return (f"Projector({g.geom_type}, model={self.model}, "
+        mode = f", mode={self.mode}" if self.mode != "auto" else ""
+        return (f"Projector({g.geom_type}, model={self.model}{mode}, "
                 f"vol={g.vol.shape}, sino={g.sino_shape})")

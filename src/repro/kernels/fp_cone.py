@@ -29,12 +29,21 @@ forward kernel, so the registered pair is matched on-kernel end to end:
 ``bp_cone_sf_ref`` (the jnp-oracle adjoint) is kept as the cross-check
 oracle for ``tests/test_kernels.py``.
 
-Batching: the per-lane axial resample depends on the actual detector-row
-coordinate of each lane, so batch cannot be packed into the 128-wide axis the
-way the parallel kernel does.  Instead a leading batch dimension is folded
-into the *view* grid axis (FP) / the *gathered-output* grid axis (BP) — the
-per-view parameter table stays shared across samples, so one ``pallas_call``
-covers the whole batch (no vmap over the kernel).
+Batching: the *exact* kernels' per-lane axial resample depends on the actual
+detector-row coordinate of each lane, so batch cannot be packed into the
+128-wide axis the way the parallel kernel does.  Instead a leading batch
+dimension is folded into the *view* grid axis (FP) / the *gathered-output*
+grid axis (BP) — the per-view parameter table stays shared across samples,
+so one ``pallas_call`` covers the whole batch (no vmap over the kernel).
+
+For small cone angles the **packed pair** (``fp_cone_packed`` /
+``bp_cone_packed``) removes the obstacle: detector rows are pre-resampled
+onto volume z-planes at the central magnification *outside* the kernel
+(``_z_overlap_cone_packed``), the transaxial remainder is exactly the fan
+kernel, and ``batch x n_rows`` lane packing applies directly.  The
+approximation carries a derived per-geometry error bound
+(``cone_packed_error_bound``) that gates ``mode="auto"`` dispatch in
+``repro.kernels.ops`` (see docs/KERNELS.md "Packed cone pair").
 
 Tile sizes come from :mod:`repro.kernels.tune` (``KernelConfig``).
 """
@@ -490,6 +499,170 @@ def bp_cone_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
     return acc if batched else acc[0]
 
 
+# --------------------------------------------------------------------------- #
+# Packed (lane-packed) cone pair: small-cone-angle axial pre-resample
+# --------------------------------------------------------------------------- #
+def _z_overlap_cone_packed(geom: CTGeometry) -> np.ndarray:
+    """(nz, nv) axial pre-resample matrix at the *central* magnification.
+
+    The exact cone kernel resamples each volume z-line onto detector rows at
+    the per-voxel magnification ``sdd/ell`` — that per-lane dependence is
+    what blocks lane packing.  The packed approximation freezes the
+    magnification at its rotation-axis value ``mag0 = sdd/sod`` (and the
+    axial obliquity at the central ray's ``sqrt(1 + z^2/sod^2)``), making
+    the z -> detector-row map voxel-independent: it becomes one (nz, nv)
+    rect-overlap matrix applied *outside* the kernel, exactly like the
+    parallel/fan axial separation.  The remaining transaxial contraction is
+    the fan kernel verbatim, so batch x n_rows lane packing applies.
+
+    Error: a z-plane at height ``z`` lands ``z * (sdd/ell - mag0)`` mm from
+    its exact row; see :func:`cone_packed_row_shift` for the worst case.
+    """
+    v = geom.vol
+    mag0 = geom.sdd / geom.sod
+    dv = geom.pixel_height
+    zc = v.z_coords().astype(np.float64)[:, None]            # (nz, 1)
+    ve = geom.v_coords().astype(np.float64)[None, :]         # (1, nv)
+    vlo = (zc - v.dz / 2.0) * mag0
+    vhi = (zc + v.dz / 2.0) * mag0
+    ov = np.maximum(np.minimum(vhi, ve + dv / 2.0)
+                    - np.maximum(vlo, ve - dv / 2.0), 0.0) / dv
+    obl = np.sqrt(1.0 + (zc / geom.sod) ** 2)                # central ray
+    return (ov * obl).astype(np.float32)
+
+
+def _z_edge_extent(geom: CTGeometry) -> float:
+    """|z| of the outermost voxel *edge* (mm) — the worst-case height."""
+    v = geom.vol
+    return v.nz * v.dz / 2.0 + abs(v.offset_z)
+
+
+def half_cone_tangent(geom: CTGeometry) -> float:
+    """tan of the half-cone angle subtended by the volume's z extent at the
+    source (``z_max / sod`` — the small parameter of the approximation)."""
+    return _z_edge_extent(geom) / geom.sod
+
+
+def cone_packed_row_shift(geom: CTGeometry) -> float:
+    """Worst-case axial footprint displacement of the packed approximation,
+    in *detector-row units*.
+
+    A voxel at transaxial source distance ``ell`` projects its z-extent at
+    magnification ``sdd/ell``; the packed matrix uses ``mag0 = sdd/sod``.
+    Over the volume disk ``ell`` ranges in [sod - R, sod + R], so a footprint
+    edge at height ``z`` is displaced by at most::
+
+        |z| * max(sdd/(sod-R) - mag0, mag0 - sdd/(sod+R))
+          =  z_max * mag0 * R / (sod - R)        [mm on the detector]
+
+    Equivalently ``tan(theta_half) * sdd * R / (sod - R)`` with theta_half
+    the half-cone angle — the shift is *first order* in the cone angle and
+    vanishes in the fan limit.
+    """
+    r = geom.vol.radius
+    mag0 = geom.sdd / geom.sod
+    dmag = max(geom.sdd / max(geom.sod - r, 1e-3) - mag0,
+               mag0 - geom.sdd / (geom.sod + r))
+    return _z_edge_extent(geom) * dmag / geom.pixel_height
+
+
+def cone_packed_error_bound(geom: CTGeometry) -> float:
+    """Documented bound on the relative L2 sinogram error of the packed
+    pair vs the exact cone pair (docs/KERNELS.md derives it).
+
+    Two mismatch sources, both functions of the half-cone angle:
+
+    * footprint displacement: every (voxel, z-plane) row-overlap window
+      shifts by at most ``s = cone_packed_row_shift(geom)`` rows, and the
+      normalized rect-overlap weights are 2-Lipschitz in the shift (a box
+      edge moves through at most ``s`` rows on each side), giving a
+      relative weight perturbation <= 2 s;
+    * obliquity: ``sqrt(1 + z^2/ell_t^2)`` is evaluated at ``ell_t = sod``
+      instead of the true transaxial distance, a relative error of at most
+      ``0.5 * tan(theta_half)^2 * ((sod/(sod-R))^2 - 1)`` (second order).
+    """
+    r = geom.vol.radius
+    s = cone_packed_row_shift(geom)
+    t = half_cone_tangent(geom)
+    obl = 0.5 * (t ** 2) * ((geom.sod / max(geom.sod - r, 1e-3)) ** 2 - 1.0)
+    return 2.0 * s + obl
+
+
+def fp_cone_packed(f, geom: CTGeometry, bu: Optional[int] = None,
+                   bv: Optional[int] = None, ba: Optional[int] = None,
+                   config: Optional[tune.KernelConfig] = None):
+    """Lane-packed cone forward projection (axial pre-resample).
+
+    f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or batched
+    f: (batch, nx, ny, nz) -> (batch, ...) with ``batch * n_rows`` detector
+    rows folded onto the 128-lane axis (the fan kernel's packing, applied to
+    the cone transaxial footprint).  Valid for small cone angles — callers
+    go through ``ops``/``Projector`` ``mode=`` dispatch, which gates on
+    :func:`cone_packed_error_bound`."""
+    if geom.geom_type != "cone" or geom.detector_type != "flat":
+        raise NotImplementedError(
+            "packed cone pair supports flat-detector cone geometries only, "
+            f"got {geom.geom_type}/{geom.detector_type}")
+    if f.ndim not in (3, 4):
+        raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
+    from repro.kernels import fp_fan                 # late: fan imports us
+    batch = f.shape[0] if f.ndim == 4 else 1
+    cfg = tune.resolve_config(geom, batch, config, dtype=f.dtype,
+                              bu=bu, bv=bv, ba=ba, packed=True)
+    Fz = jnp.asarray(_z_overlap_cone_packed(geom))             # (nz, nv)
+    if f.ndim == 3:
+        g = jnp.einsum("xyz,zv->xyv", f, Fz)                   # pre-resample
+        out = fp_fan._fp_core(g, geom, cfg)                    # (na, nu, nv)
+        return jnp.swapaxes(out, 1, 2)                         # (na, nv, nu)
+    g = jnp.einsum("bxyz,zv->xybv", f, Fz)                     # (nx, ny, B, nv)
+    g = g.reshape(geom.vol.nx, geom.vol.ny, batch * geom.n_rows)
+    out = fp_fan._fp_core(g, geom, cfg)                        # (na, nu, B*nv)
+    out = out.reshape(geom.n_angles, geom.n_cols, batch, geom.n_rows)
+    return jnp.transpose(out, (2, 0, 3, 1))                    # (B, na, nv, nu)
+
+
+def bp_cone_packed(sino, geom: CTGeometry, bg: Optional[int] = None,
+                   bv: Optional[int] = None, bab: Optional[int] = None,
+                   config: Optional[tune.KernelConfig] = None):
+    """Exact transpose of ``fp_cone_packed`` (incl. the batched path): the
+    fan BP kernel's transposed transaxial contraction followed by the
+    transposed axial pre-resample einsum."""
+    if geom.geom_type != "cone" or geom.detector_type != "flat":
+        raise NotImplementedError(
+            "packed cone pair supports flat-detector cone geometries only, "
+            f"got {geom.geom_type}/{geom.detector_type}")
+    if sino.ndim not in (3, 4):
+        raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
+    from repro.kernels import fp_fan                 # late: fan imports us
+    batch = sino.shape[0] if sino.ndim == 4 else 1
+    cfg = tune.resolve_config(geom, batch, config, dtype=sino.dtype,
+                              bg=bg, bv=bv, bab=bab, packed=True)
+    Fz = jnp.asarray(_z_overlap_cone_packed(geom))             # (nz, nv)
+    if sino.ndim == 3:
+        q = jnp.swapaxes(sino, 1, 2)                           # (na, nu, nv)
+        acc = fp_fan._bp_core(q, geom, cfg)                    # (nx, ny, nv)
+        return jnp.einsum("xyv,zv->xyz", acc, Fz)              # axial transpose
+    q = jnp.transpose(sino, (1, 3, 0, 2))                      # (na, nu, B, nv)
+    q = q.reshape(geom.n_angles, geom.n_cols, batch * geom.n_rows)
+    acc = fp_fan._bp_core(q, geom, cfg)                        # (nx, ny, B*nv)
+    acc = acc.reshape(geom.vol.nx, geom.vol.ny, batch, geom.n_rows)
+    return jnp.einsum("xybv,zv->bxyz", acc, Fz)
+
+
+def fp_cone_packed_ref(f, geom: CTGeometry):
+    """jnp oracle for the packed pair: the fan transaxial oracle with the
+    central-magnification axial pre-resample — differentiable, runs
+    everywhere, and the cross-check for ``fp_cone_packed``."""
+    return ref.fp_fan_sf(f, geom, z_overlap=_z_overlap_cone_packed(geom))
+
+
+def bp_cone_packed_ref(sino, geom: CTGeometry):
+    """Exact linear transpose of the packed oracle (via jax.vjp)."""
+    f0 = jnp.zeros(geom.vol.shape, sino.dtype)
+    _, vjp = jax.vjp(lambda x: fp_cone_packed_ref(x, geom), f0)
+    return vjp(sino)[0]
+
+
 def bp_cone_sf_ref(sino, geom: CTGeometry,
                    config: Optional[tune.KernelConfig] = None):
     """Adjoint via the jnp oracle (exact transpose of the oracle forward).
@@ -508,4 +681,7 @@ def register():
     from repro.kernels import ops
     ops.register_kernel("cone", "sf", fp_cone_sf_pallas, bp_cone_sf_pallas,
                         fp_batched=fp_cone_sf_pallas,
-                        bp_batched=bp_cone_sf_pallas)
+                        bp_batched=bp_cone_sf_pallas,
+                        fp_packed=fp_cone_packed,
+                        bp_packed=bp_cone_packed,
+                        packed_ok=tune.packed_cone_ok)

@@ -11,7 +11,10 @@ window element with no per-lane axial resample.
 Because the lane axis is purely data-parallel again, **lane packing applies
 directly**: batched inputs fold ``batch x n_rows`` detector rows onto the
 128-wide axis instead of vmapping the ``pallas_call`` — the fan beam is the
-"pre-collapsed axial" case the ROADMAP's cone lane-packing item asks about.
+"pre-collapsed axial" limit of the cone beam, and the packed cone pair
+(``fp_cone.fp_cone_packed``) reuses ``_fp_core``/``_bp_core`` below with a
+central-magnification axial pre-resample to lane-pack small-cone-angle
+batches the same way.
 
 Detector models (``geom.detector_type``):
 

@@ -22,6 +22,15 @@ dimension into the TPU lane axis (see ``fp_par.py``); when present these
 replace the per-sample ``jax.vmap`` over the ``pallas_call`` — the vmap path
 remains the fallback for the ref backend and batch-unaware kernels.
 
+Modes: a kernel entry may additionally register an approximate *packed*
+pair (cone: the lane-packed axial pre-resample, ``fp_cone.fp_cone_packed``)
+guarded by a per-geometry predicate.  ``mode="exact"`` always uses the
+exact pair, ``mode="packed"`` forces the packed one, and the default
+``mode="auto"`` dispatches packed only when the registered gate
+(``tune.packed_cone_ok`` — the derived error bound under tolerance)
+accepts the geometry.  Both pairs are matched custom_vjp pairs, so
+gradients stay exactly consistent in every mode.
+
 Tile/block sizes come from :class:`repro.kernels.tune.KernelConfig`; pass
 ``config=`` to pin one explicitly (it becomes part of the op-cache key, so a
 fixed config never retraces).  The op cache is a bounded LRU keyed on
@@ -41,26 +50,40 @@ from repro.kernels import ref, tune
 
 
 class _KernelEntry(NamedTuple):
-    """A registered Pallas kernel pair (+ optional lane-packed batched pair)."""
+    """A registered Pallas kernel pair (+ optional lane-packed batched pair
+    and, for cone, an approximate *packed* pair gated by ``packed_ok``)."""
     fp: Callable
     bp: Callable
     fp_batched: Optional[Callable] = None
     bp_batched: Optional[Callable] = None
+    fp_packed: Optional[Callable] = None
+    bp_packed: Optional[Callable] = None
+    packed_ok: Optional[Callable] = None     # geom -> bool (mode="auto" gate)
 
 
 # {(geom_type, model): _KernelEntry} — filled by the kernels package on import
 _KERNEL_TABLE: Dict[Tuple[str, str], _KernelEntry] = {}
 
+_MODES = ("auto", "exact", "packed")
+
 
 def register_kernel(geom_type: str, model: str, fp: Callable, bp: Callable,
                     fp_batched: Optional[Callable] = None,
-                    bp_batched: Optional[Callable] = None):
+                    bp_batched: Optional[Callable] = None,
+                    fp_packed: Optional[Callable] = None,
+                    bp_packed: Optional[Callable] = None,
+                    packed_ok: Optional[Callable] = None):
     """Register a Pallas kernel pair.  All callables take
     ``(array, geom, config=KernelConfig|None)``; the batched variants accept
     a leading batch dimension and fold it into the kernel (lane packing or
-    view-axis folding) instead of requiring an outer vmap."""
+    view-axis folding) instead of requiring an outer vmap.
+
+    ``fp_packed``/``bp_packed`` register an *approximate* matched pair (the
+    lane-packed cone pre-resample) selected by ``mode="packed"`` or by
+    ``mode="auto"`` when ``packed_ok(geom)`` holds (the per-geometry error
+    bound stays under tolerance)."""
     _KERNEL_TABLE[(geom_type, model)] = _KernelEntry(
-        fp, bp, fp_batched, bp_batched)
+        fp, bp, fp_batched, bp_batched, fp_packed, bp_packed, packed_ok)
 
 
 class Ops(NamedTuple):
@@ -110,8 +133,43 @@ def _use_pallas(geom: CTGeometry, model: str, backend: str) -> bool:
         and jax.default_backend() == "tpu")
 
 
+def _resolve_mode(geom: CTGeometry, model: str, mode: str,
+                  use_pallas: bool) -> str:
+    """Collapse ``mode`` to the concrete pair that will dispatch
+    ("exact" | "packed")."""
+    if mode not in _MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {_MODES}")
+    if mode == "exact":
+        return "exact"
+    entry = _KERNEL_TABLE.get((geom.geom_type, model))
+    has_packed = (use_pallas and entry is not None
+                  and entry.fp_packed is not None
+                  and entry.bp_packed is not None)
+    if mode == "packed":
+        if not has_packed:
+            raise NotImplementedError(
+                f"mode='packed' needs a registered packed kernel pair for "
+                f"({geom.geom_type}, {model}) on the pallas backend")
+        return "packed"
+    # "auto": packed only when the registered gate accepts the geometry
+    # (the per-geometry error bound is under tolerance).
+    if has_packed and entry.packed_ok is not None and entry.packed_ok(geom):
+        return "packed"
+    return "exact"
+
+
+def resolve_mode(geom: CTGeometry, model: str = "sf", backend: str = "auto",
+                 mode: str = "auto") -> str:
+    """The concrete kernel mode ("exact" | "packed") that
+    ``forward_project``/``back_project`` would dispatch for these arguments —
+    exposed so callers (and tests) can observe the ``mode="auto"`` policy
+    without probing numerics."""
+    return _resolve_mode(geom, model, mode, _use_pallas(geom, model, backend))
+
+
 def _build(geom: CTGeometry, model: str, backend: str,
-           config: Optional[tune.KernelConfig], use_pallas: bool) -> Ops:
+           config: Optional[tune.KernelConfig], use_pallas: bool,
+           mode: str) -> Ops:
     fp_b = bp_b = None
     if use_pallas:
         key = (geom.geom_type, model)
@@ -121,12 +179,19 @@ def _build(geom: CTGeometry, model: str, backend: str,
         # An explicit user config is pinned; config=None flows through so
         # the kernel entry points resolve against the *actual* input batch
         # size and dtype (batch-/dtype-aware shape classes and autotune).
-        raw_fp = lambda f: entry.fp(f, geom, config=config)
-        raw_bp = lambda p: entry.bp(p, geom, config=config)
-        if entry.fp_batched is not None and entry.bp_batched is not None:
-            fp_b, bp_b = _make_pair(
-                lambda f: entry.fp_batched(f, geom, config=config),
-                lambda p: entry.bp_batched(p, geom, config=config))
+        if mode == "packed":
+            # The packed pair lane-packs batches natively (3D and 4D inputs
+            # through the same entry points).
+            raw_fp = lambda f: entry.fp_packed(f, geom, config=config)
+            raw_bp = lambda p: entry.bp_packed(p, geom, config=config)
+            fp_b, bp_b = _make_pair(raw_fp, raw_bp)
+        else:
+            raw_fp = lambda f: entry.fp(f, geom, config=config)
+            raw_bp = lambda p: entry.bp(p, geom, config=config)
+            if entry.fp_batched is not None and entry.bp_batched is not None:
+                fp_b, bp_b = _make_pair(
+                    lambda f: entry.fp_batched(f, geom, config=config),
+                    lambda p: entry.bp_batched(p, geom, config=config))
     else:
         raw_fp = lambda f: ref.forward(f, geom, model)
         raw_bp = lambda p: ref.adjoint(p, geom, model)
@@ -142,17 +207,21 @@ _OPS_CACHE_SIZE = 256
 
 
 def _get_bundle(geom: CTGeometry, model: str = "sf", backend: str = "auto",
-                config: Optional[tune.KernelConfig] = None) -> Ops:
+                config: Optional[tune.KernelConfig] = None,
+                mode: str = "auto") -> Ops:
     use_pallas = _use_pallas(geom, model, backend)
+    rmode = _resolve_mode(geom, model, mode, use_pallas)
     # The cache is keyed on the *user's* config value: None means "let the
     # kernel resolve per call" (note: re-registering configs after a bundle
     # is cached requires clear_cache() to take effect on the None key).
-    key = (geom.key(), model, backend, config)
+    # Mode is keyed on the *resolved* value so "auto" and an explicit
+    # "packed"/"exact" share one bundle when they dispatch the same pair.
+    key = (geom.key(), model, backend, config, rmode)
     hit = _OPS_CACHE.get(key)
     if hit is not None:
         _OPS_CACHE.move_to_end(key)
         return hit
-    bundle = _build(geom, model, backend, config, use_pallas)
+    bundle = _build(geom, model, backend, config, use_pallas, rmode)
     _OPS_CACHE[key] = bundle
     while len(_OPS_CACHE) > _OPS_CACHE_SIZE:
         _OPS_CACHE.popitem(last=False)
@@ -165,13 +234,21 @@ def clear_cache() -> None:
 
 
 def get_ops(geom: CTGeometry, model: str = "sf", backend: str = "auto",
-            config: Optional[tune.KernelConfig] = None
-            ) -> Tuple[Callable, Callable]:
+            config: Optional[tune.KernelConfig] = None,
+            mode: str = "auto") -> Tuple[Callable, Callable]:
     """Return the (forward, back) matched differentiable pair for a geometry.
 
-    Repeated calls with an equal geometry/model/backend/config return the
-    *same* function objects, so jit caches built around them never retrace."""
-    bundle = _get_bundle(geom, model, backend, config)
+    ``mode`` selects between the exact kernels and an approximate *packed*
+    pair where one is registered (cone): "exact" forces the exact pair,
+    "packed" forces the packed pair (error ignored), "auto" uses packed only
+    when the per-geometry error bound is under tolerance
+    (``tune.packed_cone_ok``).  The packed pair is matched (exact transpose
+    of itself), so gradients stay consistent in every mode.
+
+    Repeated calls with an equal geometry/model/backend/config/mode return
+    the *same* function objects, so jit caches built around them never
+    retrace."""
+    bundle = _get_bundle(geom, model, backend, config, mode)
     return bundle.fp, bundle.bp
 
 
@@ -204,15 +281,17 @@ def _apply(op: Callable, op_batched: Optional[Callable], x, ndim_in: int):
 
 def forward_project(f, geom: CTGeometry, model: str = "sf",
                     backend: str = "auto",
-                    config: Optional[tune.KernelConfig] = None):
+                    config: Optional[tune.KernelConfig] = None,
+                    mode: str = "auto"):
     """A @ f.  ``f``: (..., nx, ny, nz) -> (..., n_angles, n_rows, n_cols)."""
-    b = _get_bundle(geom, model, backend, config)
+    b = _get_bundle(geom, model, backend, config, mode)
     return _apply(b.fp, b.fp_batched, f, 3)
 
 
 def back_project(p, geom: CTGeometry, model: str = "sf",
                  backend: str = "auto",
-                 config: Optional[tune.KernelConfig] = None):
+                 config: Optional[tune.KernelConfig] = None,
+                 mode: str = "auto"):
     """A^T @ p.  ``p``: (..., n_angles, n_rows, n_cols) -> (..., nx, ny, nz)."""
-    b = _get_bundle(geom, model, backend, config)
+    b = _get_bundle(geom, model, backend, config, mode)
     return _apply(b.bp, b.bp_batched, p, 3)

@@ -148,17 +148,22 @@ def fp_parallel_sf(f, geom: CTGeometry):
 # --------------------------------------------------------------------------- #
 # Fan beam (flat = equispaced columns, curved = equiangular arc)
 # --------------------------------------------------------------------------- #
-def fp_fan_sf(f, geom: CTGeometry):
+def fp_fan_sf(f, geom: CTGeometry, z_overlap=None):
     """Separable-footprint fan beam: exact corner-projection trapezoid in the
     transaxial direction x the parallel (angle-independent) rectangle overlap
-    axially — the cone model with the axial magnification collapsed."""
+    axially — the cone model with the axial magnification collapsed.
+
+    ``z_overlap`` substitutes a custom (nz, nv) axial matrix; the packed
+    cone oracle (``fp_cone.fp_cone_packed_ref``) passes its central-
+    magnification pre-resample here, reusing the transaxial math."""
     v = geom.vol
     nx, ny, nz = v.shape
     nu, nv = geom.n_cols, geom.n_rows
     du = geom.pixel_width
     sod, sdd = geom.sod, geom.sdd
     curved = geom.detector_type == "curved"
-    Fz = jnp.asarray(_z_overlap_matrix(geom))                    # (nz, nv)
+    Fz = jnp.asarray(_z_overlap_matrix(geom) if z_overlap is None
+                     else z_overlap)                             # (nz, nv)
     g = jnp.einsum("xyz,zv->xyv", f, Fz).reshape(nx * ny, nv)    # axial first
     X = jnp.asarray(np.repeat(v.x_coords(), ny))
     Y = jnp.asarray(np.tile(v.y_coords(), nx))

@@ -23,7 +23,10 @@ site resolves a :class:`KernelConfig` through :func:`get_config`:
 
 Configs are keyed by a coarse *shape class*, not the exact geometry, so one
 sweep serves every geometry of the same regime (e.g. all 2D limited-angle
-training shapes share an entry).  ``KernelConfig`` is frozen/hashable and is
+training shapes share an entry).  The packed cone pair tunes as its own
+``"cone-packed"`` regime (its kernel structure is the fan kernel's, not the
+exact cone kernel's); this module also owns the ``mode="auto"`` dispatch
+gate for it (:func:`packed_cone_ok`).  ``KernelConfig`` is frozen/hashable and is
 part of the op-cache key in ``repro.kernels.ops`` — passing the same config
 therefore reuses the cached (traced) ops instead of retracing.
 
@@ -59,6 +62,8 @@ __all__ = [
     "cache_path",
     "save_tuned",
     "load_tuned",
+    "packed_cone_tolerance",
+    "packed_cone_ok",
 ]
 
 LANE = 128          # TPU lane width: the bv axis should be a multiple of this
@@ -103,7 +108,7 @@ def _round_up8(n: int) -> int:
 
 
 def shape_class(geom: CTGeometry, batch: int = 1,
-                dtype=jnp.float32) -> Tuple:
+                dtype=jnp.float32, packed: bool = False) -> Tuple:
     """Coarse key identifying a kernel-tuning regime.
 
     Buckets the axes that drive tile choice: transaxial volume size, the
@@ -111,9 +116,14 @@ def shape_class(geom: CTGeometry, batch: int = 1,
     ``batch * n_rows`` (what actually lands on the 128-wide axis after
     packing).  Exact geometry values (angles, spacings, shifts) do not
     change the optimal tiles and are deliberately excluded.
+
+    ``packed`` marks the lane-packed cone pair (``fp_cone_packed``), whose
+    kernel structure — and therefore optimal tiles — is the fan kernel's,
+    not the exact cone kernel's; it tunes as its own regime.
     """
     lanes = batch * geom.n_rows
-    return (geom.geom_type,
+    kind = geom.geom_type + ("-packed" if packed else "")
+    return (kind,
             _bucket(max(geom.vol.nx, geom.vol.ny)),
             _bucket(geom.n_cols),
             _bucket(geom.n_angles),
@@ -233,7 +243,7 @@ def _autotune_enabled(flag: Optional[bool]) -> bool:
 
 
 def heuristic_config(geom: CTGeometry, batch: int = 1,
-                     dtype=jnp.float32) -> KernelConfig:
+                     dtype=jnp.float32, packed: bool = False) -> KernelConfig:
     """Static table used off-TPU and as the autotune fallback/seed."""
     nu = geom.n_cols
     na = geom.n_angles
@@ -242,7 +252,11 @@ def heuristic_config(geom: CTGeometry, batch: int = 1,
     # stays comfortably inside VMEM.
     bu = 8 if nu <= 16 else (16 if nu <= 512 else 32)
     bv = LANE
-    if geom.geom_type == "cone":
+    if geom.geom_type == "cone" and packed:
+        # The packed cone pair IS the fan kernel (the axial part is
+        # pre-resampled outside): fan tiles, full 128-lane packing.
+        bu = max(8, bu // 2)
+    elif geom.geom_type == "cone":
         # The cone kernel's gathered-axis window W grows with bu and is
         # walked by an inner loop — keep the column tile small.
         bu = 8
@@ -270,9 +284,10 @@ def heuristic_config(geom: CTGeometry, batch: int = 1,
 
 
 def get_config(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
-               autotune_flag: Optional[bool] = None) -> KernelConfig:
+               autotune_flag: Optional[bool] = None,
+               packed: bool = False) -> KernelConfig:
     """Resolve the config for ``geom`` (see module docstring for the order)."""
-    key = shape_class(geom, batch, dtype)
+    key = shape_class(geom, batch, dtype, packed)
     if key in _REGISTRY:
         return _REGISTRY[key]
     if key in _AUTOTUNED:
@@ -282,20 +297,56 @@ def get_config(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
         _AUTOTUNED[key] = disk
         return disk
     if _on_tpu() and _autotune_enabled(autotune_flag):
-        return autotune(geom, batch=batch, dtype=dtype)
-    return heuristic_config(geom, batch, dtype)
+        return autotune(geom, batch=batch, dtype=dtype, packed=packed)
+    return heuristic_config(geom, batch, dtype, packed)
 
 
 def resolve_config(geom: CTGeometry, batch: int,
                    config: Optional[KernelConfig],
-                   dtype=jnp.float32, **overrides) -> KernelConfig:
+                   dtype=jnp.float32, packed: bool = False,
+                   **overrides) -> KernelConfig:
     """Shared entry-point resolution: an explicit ``config`` wins, else the
     registry/heuristics via :func:`get_config` (keyed on the input dtype);
     non-None keyword overrides (e.g. a caller's ``bu=8``) are applied last."""
     cfg = config if config is not None \
-        else get_config(geom, batch=batch, dtype=dtype)
+        else get_config(geom, batch=batch, dtype=dtype, packed=packed)
     kw = {k: v for k, v in overrides.items() if v is not None}
     return cfg.replace(**kw) if kw else cfg
+
+
+# --------------------------------------------------------------------------- #
+# Packed-cone dispatch gate
+# --------------------------------------------------------------------------- #
+# Default ceiling on the packed approximation's worst-case axial footprint
+# displacement (detector rows).  A quarter row keeps the documented relative
+# error bound (2x the shift + the second-order obliquity term, see
+# fp_cone.cone_packed_error_bound) comfortably below typical detector noise.
+PACKED_CONE_DEFAULT_TOL = 0.25
+
+
+def packed_cone_tolerance() -> float:
+    """Row-shift ceiling for ``mode="auto"`` packed-cone dispatch
+    (``REPRO_PACKED_CONE_TOL`` overrides the default)."""
+    val = os.environ.get("REPRO_PACKED_CONE_TOL", "").strip()
+    if val:
+        try:
+            return float(val)
+        except ValueError:
+            # A typo'd tolerance silently falling back to the default would
+            # dispatch approximate kernels at a looser gate than the user
+            # asked for — make the misconfiguration loud instead.
+            raise ValueError(
+                f"REPRO_PACKED_CONE_TOL={val!r} is not a float") from None
+    return PACKED_CONE_DEFAULT_TOL
+
+
+def packed_cone_ok(geom: CTGeometry) -> bool:
+    """True when the packed (lane-packed, axial pre-resample) cone pair is
+    within tolerance for this geometry — the ``mode="auto"`` gate."""
+    if geom.geom_type != "cone" or geom.detector_type != "flat":
+        return False
+    from repro.kernels import fp_cone                 # late: avoid cycle
+    return fp_cone.cone_packed_row_shift(geom) <= packed_cone_tolerance()
 
 
 # --------------------------------------------------------------------------- #
@@ -326,7 +377,7 @@ def default_candidates(geom: CTGeometry) -> Iterable[KernelConfig]:
 
 def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
              candidates: Optional[Iterable[KernelConfig]] = None,
-             reps: int = 3) -> KernelConfig:
+             reps: int = 3, packed: bool = False) -> KernelConfig:
     """Measure candidate configs with the real kernels and cache the winner.
 
     Only meaningful on TPU (interpret-mode timings reflect the Python
@@ -334,9 +385,9 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
     without measuring.  FP and BP are timed independently and the best
     (bu, ba) is combined with the best (bg, bab).
     """
-    key = shape_class(geom, batch, dtype)
+    key = shape_class(geom, batch, dtype, packed)
     if not _on_tpu():
-        cfg = heuristic_config(geom, batch, dtype)
+        cfg = heuristic_config(geom, batch, dtype, packed)
         _AUTOTUNED[key] = cfg
         return cfg
 
@@ -344,11 +395,16 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
 
     cand = list(candidates) if candidates is not None \
         else list(default_candidates(geom))
-    if geom.geom_type == "cone":
+    if geom.geom_type == "cone" and packed:
+        # The packed cone pair is structurally the fan kernel (lane-packed,
+        # view-blocked) — run the same full fp/bp sweep on its entry points.
+        from repro.kernels import fp_cone
+        fp_fn, bp_fn = fp_cone.fp_cone_packed, fp_cone.bp_cone_packed
+    elif geom.geom_type == "cone":
         # Cone has no FP view-blocking knob (views fold into the grid) but
         # a full Pallas BP: sweep the FP column tile and the BP (bg, bab).
         return _autotune_cone(geom, batch, dtype, cand, reps, key)
-    if geom.geom_type == "fan":
+    elif geom.geom_type == "fan":
         # Fan is Pallas end to end like parallel: same full fp/bp sweep.
         from repro.kernels import fp_fan
         fp_fn, bp_fn = fp_fan.fp_fan_sf_pallas, fp_fan.bp_fan_sf_pallas
@@ -366,7 +422,7 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
     sshape = ((batch,) if batch > 1 else ()) + geom.sino_shape
     y = jnp.ones(sshape, dtype)
 
-    heur = heuristic_config(geom, batch, dtype)
+    heur = heuristic_config(geom, batch, dtype, packed)
     best_fp, t_fp = None, float("inf")
     for bu, ba in fp_grid:
         cfg = KernelConfig(bu=bu, ba=ba)

@@ -129,8 +129,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t_lower = time.time() - t0
     compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
+    from repro import compat
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis_dict(compiled)
     rec = {
         "arch": arch, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",

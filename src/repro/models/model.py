@@ -72,7 +72,9 @@ def init_params(cfg: ModelConfig, key):
     """Real (smoke-test-scale) initialization."""
     dt = jnp.dtype(cfg.param_dtype)
     shapes = param_shapes(cfg)
-    flat, treedef = jax.tree.flatten_with_path(
+    # jax.tree.flatten_with_path only exists on jax >= 0.4.38; the
+    # tree_util spelling works on every version we support.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
         shapes, is_leaf=lambda s: isinstance(s, tuple))
     keys = jax.random.split(key, len(flat))
     leaves = []

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import Projector, VolumeGeometry, parallel_beam
 from repro.core.distributed import halo_exchange_z, make_distributed_projector
 
@@ -57,7 +58,7 @@ def test_halo_exchange_identity_on_single_shard(mesh):
     f = jax.random.normal(jax.random.PRNGKey(0), (8, 8, 6))
 
     from functools import partial
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(compat.shard_map, mesh=mesh,
              in_specs=(jax.sharding.PartitionSpec(None, None, "model"),),
              out_specs=jax.sharding.PartitionSpec(None, None, "model"),
              check_vma=False)
