@@ -19,12 +19,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import VolumeGeometry, cone_beam, fan_beam, parallel_beam
+from repro.core import (VolumeGeometry, cone_beam, fan_beam, helical_beam,
+                        parallel_beam)
 from repro.kernels import ref
 from repro.kernels.fp_cone import (bp_cone_packed, bp_cone_sf_pallas,
                                    cone_packed_row_shift, fp_cone_packed,
                                    fp_cone_sf_pallas)
 from repro.kernels.fp_fan import bp_fan_sf_pallas, fp_fan_sf_pallas
+from repro.kernels.fp_modular import (bp_modular_sf_pallas,
+                                      fp_modular_sf_pallas,
+                                      fp_modular_sf_ref)
 from repro.kernels.fp_par import bp_parallel_sf_pallas, fp_parallel_sf_pallas
 from repro.kernels.tune import KernelConfig
 
@@ -172,6 +176,31 @@ def run(csv_rows: list):
     t_bpc = _t(lambda p: bp_cone_sf_pallas(p, gc), yc, reps=reps)
     csv_rows.append(("kernel/bp_cone_sf/pallas", t_bpc * 1e6,
                      f"{mode};bp_over_fp={t_bpc / max(t_fpc, 1e-12):.2f}x"))
+
+    # ---- modular beam (helical): the Pallas SF matched pair -------------- #
+    # The modular pair is the cone pair generalized to per-view frames
+    # (scalar-prefetched 24-float rows); a helical trajectory is the
+    # canonical workload no fixed-geometry kernel can express.  Both rows
+    # are gated by check_regression (and grepped by benchmarks-smoke).
+    if on_tpu:
+        volm = VolumeGeometry(64, 64, 16)
+        gm = helical_beam(1.0, 16.0, 24, 16, 96, volm, sod=150.0, sdd=300.0,
+                          pixel_width=2.0, pixel_height=2.0)
+    else:
+        volm = VolumeGeometry(16, 16, 8)
+        gm = helical_beam(1.0, 8.0, 4, 8, 24, volm, sod=80.0, sdd=160.0,
+                          pixel_width=2.0, pixel_height=2.0)
+    fm = jnp.asarray(np.random.default_rng(11).normal(
+        size=volm.shape).astype(np.float32))
+    ym = jnp.asarray(np.random.default_rng(12).normal(
+        size=gm.sino_shape).astype(np.float32))
+    t = _t(jax.jit(lambda x: fp_modular_sf_ref(x, gm)), fm)
+    csv_rows.append(("kernel/fp_modular_sf/jnp_oracle", t * 1e6, "cpu-jit"))
+    t_fpm = _t(lambda x: fp_modular_sf_pallas(x, gm), fm, reps=reps)
+    csv_rows.append(("kernel/fp_modular_sf/pallas", t_fpm * 1e6, mode))
+    t_bpm = _t(lambda p: bp_modular_sf_pallas(p, gm), ym, reps=reps)
+    csv_rows.append(("kernel/bp_modular_sf/pallas", t_bpm * 1e6,
+                     f"{mode};bp_over_fp={t_bpm / max(t_fpm, 1e-12):.2f}x"))
 
     # ---- batched multi-row cone: exact view-folded batch vs lane packing - #
     # The ROADMAP's last kernel item: the exact cone pair folds batches into

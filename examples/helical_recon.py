@@ -1,0 +1,49 @@
+"""Helical (spiral) cone-beam reconstruction through the modular SF pair.
+
+A helical trajectory — source orbiting while translating along the rotation
+axis — cannot be expressed by the fixed parallel/fan/cone geometries; it is
+the canonical *modular* workload.  ``helical_beam`` emits per-view modular
+frames, the Pallas SF matched pair runs them on-kernel (frames scalar-
+prefetched per view), and the iterative solvers work out of the box because
+the backprojector is the exact transpose of the forward.
+
+    PYTHONPATH=src python examples/helical_recon.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Projector, VolumeGeometry, from_config, helical_beam
+from repro.data.metrics import psnr
+from repro.recon import cgls, fista_tv, sirt
+
+vol = VolumeGeometry(32, 32, 16)
+geom = helical_beam(n_turns=2.0, pitch=8.0, n_angles=48, n_rows=12,
+                    n_cols=48, vol=vol, sod=130.0, sdd=260.0,
+                    pixel_width=2.0, pixel_height=2.0)
+src = np.asarray(geom.source_pos)
+print(f"helical scan: {geom.n_angles} views over 2 turns, "
+      f"source z {src[0, 2]:.1f} -> {src[-1, 2]:.1f} mm "
+      f"(pitch 8 mm/turn)")
+
+# the same scan is expressible as a config file (from_config round-trip)
+cfg = {"geom_type": "helical", "n_turns": 2.0, "pitch": 8.0,
+       "n_angles": 48, "n_rows": 12, "n_cols": 48, "sod": 130.0,
+       "sdd": 260.0, "pixel_width": 2.0, "pixel_height": 2.0,
+       "volume": {"nx": 32, "ny": 32, "nz": 16}}
+assert from_config(cfg).key() == geom.key()
+
+# synthetic object spanning the full z extent (what the helix exists for)
+f = jnp.zeros(vol.shape).at[9:17, 9:20, 2:14].set(0.02)
+f = f.at[20:27, 7:13, 5:11].set(0.035)
+f = f.at[13:19, 21:27, 9:15].set(0.027)
+
+proj = Projector(geom, model="sf")     # modular SF matched pair
+y = proj(f)
+print(f"sinogram {y.shape}, projector {proj}")
+
+x_sirt = sirt(proj, y, n_iters=30)
+x_cgls, _ = cgls(proj, y, n_iters=20)
+x_tv = fista_tv(proj, y, n_iters=30, beta=2e-3)
+print(f"helical SIRT     PSNR {psnr(x_sirt, f, 0.035):.2f} dB")
+print(f"helical CGLS     PSNR {psnr(x_cgls, f, 0.035):.2f} dB")
+print(f"helical FISTA-TV PSNR {psnr(x_tv, f, 0.035):.2f} dB")

@@ -10,13 +10,13 @@ The projector/ops re-exports are lazy to keep `repro.core` importable from
 inside `repro.kernels` (the kernels register themselves with ops at import).
 """
 from repro.core.geometry import (CTGeometry, VolumeGeometry, cone_beam,
-                                 fan_beam, from_config, modular_beam,
-                                 parallel_beam)
+                                 fan_beam, from_config, helical_beam,
+                                 modular_beam, parallel_beam)
 
 __all__ = [
     "CTGeometry", "VolumeGeometry", "parallel_beam", "fan_beam", "cone_beam",
-    "modular_beam", "from_config", "Projector", "forward_project",
-    "back_project", "fbp",
+    "modular_beam", "helical_beam", "from_config", "Projector",
+    "forward_project", "back_project", "fbp",
 ]
 
 # fbp has no import cycle with kernels and must be bound eagerly: once the

@@ -57,6 +57,7 @@ __all__ = [
     "fan_beam",
     "cone_beam",
     "modular_beam",
+    "helical_beam",
     "from_config",
 ]
 
@@ -296,6 +297,45 @@ def modular_beam(source_pos, det_center, det_u, det_v,
                       det_u=_as_f32(det_u), det_v=_as_f32(det_v))
 
 
+def helical_beam(n_turns: float, pitch: float, n_angles: int,
+                 n_rows: int, n_cols: int, vol: VolumeGeometry,
+                 sod: float, sdd: float,
+                 pixel_width: float = 1.0, pixel_height: float = 1.0,
+                 start_angle: float = 0.0,
+                 z_start: Optional[float] = None) -> CTGeometry:
+    """Helical (spiral) cone-beam trajectory, expressed as modular frames.
+
+    The source orbits the rotation axis at radius ``sod`` while translating
+    along z at ``pitch`` mm per full turn; the detector rides opposite the
+    source at distance ``sdd``, rows parallel to the rotation axis (the
+    standard diagnostic-CT frame, which the modular Pallas SF pair supports
+    on-kernel).  ``n_angles`` views are spread uniformly over
+    ``n_turns * 360`` degrees starting at ``start_angle`` (rad).
+
+    ``z_start`` is the source z at the first view; the default starts the
+    helix at ``offset_z - span/2`` with ``span = n_turns * pitch``.  Views
+    sample the span *endpoint-exclusively*, matching the angular grid (view
+    ``i`` sits at fraction ``i/n_angles`` of both the azimuth and the z
+    travel), so the last view is one z-step below ``offset_z + span/2`` —
+    exactly as the next turn's first view would coincide with it in angle.
+    """
+    if n_turns <= 0 or pitch < 0:
+        raise ValueError(f"need n_turns > 0 and pitch >= 0, "
+                         f"got {(n_turns, pitch)}")
+    t = np.arange(n_angles) / n_angles                 # [0, 1)
+    phi = start_angle + 2.0 * math.pi * n_turns * t
+    span = n_turns * pitch
+    z0 = (vol.offset_z - span / 2.0) if z_start is None else z_start
+    z = z0 + span * t
+    c, s = np.cos(phi), np.sin(phi)
+    src = np.stack([sod * c, sod * s, z], -1)
+    ctr = np.stack([(sod - sdd) * c, (sod - sdd) * s, z], -1)
+    du = np.stack([-s, c, np.zeros_like(c)], -1)
+    dv = np.stack([np.zeros_like(c), np.zeros_like(c), np.ones_like(c)], -1)
+    return modular_beam(src, ctr, du, dv, n_rows, n_cols, vol,
+                        pixel_width, pixel_height)
+
+
 def cone_as_modular(g: CTGeometry) -> CTGeometry:
     """Re-express an axial cone-beam geometry in modular form (for testing the
     modular path against the cone path)."""
@@ -329,4 +369,9 @@ def from_config(cfg: dict) -> CTGeometry:
         return cone_beam(vol=vol, **cfg)
     if t == "modular":
         return modular_beam(vol=vol, **cfg)
+    if t == "helical":
+        # Convenience spelling: the emitted geometry is geom_type="modular"
+        # (helical frames are modular frames), but configuration files can
+        # carry the compact (n_turns, pitch, sod, sdd) description.
+        return helical_beam(vol=vol, **cfg)
     raise ValueError(f"unknown geom_type {t!r}")

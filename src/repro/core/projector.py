@@ -12,9 +12,10 @@ into any training/inference pipeline.
 
 Batched inputs (leading dims) are supported; gradients flow through every
 method via the matched custom_vjp pairs in ``repro.kernels.ops``.  On the
-Pallas backend every geometry (parallel, fan, cone) runs a kernel matched
-pair — the backprojection (and therefore every gradient) is the exact
-transpose of the forward kernel, never a fallback adjoint.
+Pallas backend every geometry (parallel, fan, cone, and axial-frame
+modular — incl. helical scans) runs a kernel matched pair — the
+backprojection (and therefore every gradient) is the exact transpose of
+the forward kernel, never a fallback adjoint.
 """
 from __future__ import annotations
 
@@ -48,7 +49,11 @@ class Projector:
         if config is not None and not isinstance(config, KernelConfig):
             raise TypeError(f"config must be a KernelConfig, got {config!r}")
         self.geom = geom
-        self.model = model if geom.geom_type != "modular" else "joseph"
+        # Modular geometries run the SF matched pair like every other
+        # geometry now (Pallas for axial frames — incl. helical — via the
+        # registered `supports` gate); tilted frames fall back to the Joseph
+        # ray-marcher inside the ref dispatch, so "sf" is always safe here.
+        self.model = model
         self.backend = backend
         self.config = config
         self.mode = mode

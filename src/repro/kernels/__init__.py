@@ -20,6 +20,11 @@ def _register_all():
         fp_fan.register()
     except ImportError:
         pass
+    try:
+        from repro.kernels import fp_modular
+        fp_modular.register()
+    except ImportError:
+        pass
 
 
 _register_all()

@@ -12,10 +12,12 @@ vice versa, so autodiff never differentiates through the projector internals.
 Backends:
     * ``ref``    — pure-jnp oracles (runs everywhere; the CPU path).
     * ``pallas`` — Pallas TPU kernels (``interpret=True`` on CPU for tests).
-      Parallel, fan, and cone SF pairs are all Pallas matched pairs — each
-      registered BP is the exact transpose of its FP kernel, so training
-      steps stay on-kernel end to end for every geometry.
-    * ``auto``   — pallas for geometry/model pairs with a kernel, else ref.
+      Parallel, fan, cone, and (axial-frame) modular SF pairs are all
+      Pallas matched pairs — each registered BP is the exact transpose of
+      its FP kernel, so training steps stay on-kernel end to end for every
+      geometry, including helical trajectories.
+    * ``auto``   — pallas for geometry/model pairs with a kernel whose
+      ``supports`` gate (if any) accepts the geometry, else ref.
 
 Batching: kernels may register *batched* variants that fold a leading batch
 dimension into the TPU lane axis (see ``fp_par.py``); when present these
@@ -59,6 +61,7 @@ class _KernelEntry(NamedTuple):
     fp_packed: Optional[Callable] = None
     bp_packed: Optional[Callable] = None
     packed_ok: Optional[Callable] = None     # geom -> bool (mode="auto" gate)
+    supports: Optional[Callable] = None      # geom -> bool (kernel coverage)
 
 
 # {(geom_type, model): _KernelEntry} — filled by the kernels package on import
@@ -72,7 +75,8 @@ def register_kernel(geom_type: str, model: str, fp: Callable, bp: Callable,
                     bp_batched: Optional[Callable] = None,
                     fp_packed: Optional[Callable] = None,
                     bp_packed: Optional[Callable] = None,
-                    packed_ok: Optional[Callable] = None):
+                    packed_ok: Optional[Callable] = None,
+                    supports: Optional[Callable] = None):
     """Register a Pallas kernel pair.  All callables take
     ``(array, geom, config=KernelConfig|None)``; the batched variants accept
     a leading batch dimension and fold it into the kernel (lane packing or
@@ -81,9 +85,15 @@ def register_kernel(geom_type: str, model: str, fp: Callable, bp: Callable,
     ``fp_packed``/``bp_packed`` register an *approximate* matched pair (the
     lane-packed cone pre-resample) selected by ``mode="packed"`` or by
     ``mode="auto"`` when ``packed_ok(geom)`` holds (the per-geometry error
-    bound stays under tolerance)."""
+    bound stays under tolerance).
+
+    ``supports`` restricts the entry to a geometry subclass (modular: axial
+    frames): ``backend="auto"`` falls back to the ref oracle when it
+    rejects a geometry; an explicit ``backend="pallas"`` still dispatches
+    and lets the kernel raise its own informative error."""
     _KERNEL_TABLE[(geom_type, model)] = _KernelEntry(
-        fp, bp, fp_batched, bp_batched, fp_packed, bp_packed, packed_ok)
+        fp, bp, fp_batched, bp_batched, fp_packed, bp_packed, packed_ok,
+        supports)
 
 
 class Ops(NamedTuple):
@@ -127,10 +137,12 @@ def _make_pair(raw_fp: Callable, raw_bp: Callable) -> Tuple[Callable, Callable]:
 def _use_pallas(geom: CTGeometry, model: str, backend: str) -> bool:
     # "auto": use the Pallas kernels on TPU; the pure-jnp path elsewhere
     # (interpret-mode Pallas is for correctness tests, not production CPU use).
-    key = (geom.geom_type, model)
-    return (backend == "pallas") or (
-        backend == "auto" and key in _KERNEL_TABLE
-        and jax.default_backend() == "tpu")
+    if backend == "pallas":
+        return True
+    entry = _KERNEL_TABLE.get((geom.geom_type, model))
+    return (backend == "auto" and entry is not None
+            and (entry.supports is None or entry.supports(geom))
+            and jax.default_backend() == "tpu")
 
 
 def _resolve_mode(geom: CTGeometry, model: str, mode: str,

@@ -391,11 +391,23 @@ _FP_TABLE = {
 }
 
 
+def register_reference(geom_type: str, model: str, fn) -> None:
+    """Add a reference projector to the dispatch table.  Kernel modules that
+    also own a jnp oracle (``fp_modular.fp_modular_sf_ref``) register it
+    here so the table's ownership stays in this module; ``adjoint`` picks
+    the entry up automatically (the vjp of any registered forward is its
+    exact transpose)."""
+    _FP_TABLE[(geom_type, model)] = fn
+
+
 def forward(f, geom: CTGeometry, model: str = "sf"):
     key = (geom.geom_type, model)
     if key not in _FP_TABLE:
         if geom.geom_type == "modular":
-            key = ("modular", "joseph")   # modular supports joseph only
+            # ("modular", "sf") is injected by fp_modular.register() when
+            # the kernels package imports; before that (or for unknown
+            # models) modular falls back to the Joseph ray-marcher.
+            key = ("modular", "joseph")
         else:
             raise NotImplementedError(f"no reference projector for {key}")
     return _FP_TABLE[key](f, geom)

@@ -25,7 +25,9 @@ Configs are keyed by a coarse *shape class*, not the exact geometry, so one
 sweep serves every geometry of the same regime (e.g. all 2D limited-angle
 training shapes share an entry).  The packed cone pair tunes as its own
 ``"cone-packed"`` regime (its kernel structure is the fan kernel's, not the
-exact cone kernel's); this module also owns the ``mode="auto"`` dispatch
+exact cone kernel's), and the modular pair as a ``"modular"`` regime with
+cone-style heuristics (grid-folded views, rows tiled physically on the v
+axis); this module also owns the ``mode="auto"`` dispatch
 gate for it (:func:`packed_cone_ok`).  ``KernelConfig`` is frozen/hashable and is
 part of the op-cache key in ``repro.kernels.ops`` — passing the same config
 therefore reuses the cached (traced) ops instead of retracing.
@@ -256,13 +258,13 @@ def heuristic_config(geom: CTGeometry, batch: int = 1,
         # The packed cone pair IS the fan kernel (the axial part is
         # pre-resampled outside): fan tiles, full 128-lane packing.
         bu = max(8, bu // 2)
-    elif geom.geom_type == "cone":
-        # The cone kernel's gathered-axis window W grows with bu and is
-        # walked by an inner loop — keep the column tile small.
+    elif geom.geom_type in ("cone", "modular"):
+        # The cone/modular kernels' gathered-axis window W grows with bu and
+        # is walked by an inner loop — keep the column tile small.
         bu = 8
-        # Cone kernels tile *physical* detector rows on the v axis (no lane
-        # packing; the BP's lane axis is z) — pad rows to the sublane
-        # multiple instead of a full 128-lane tile.
+        # Cone/modular kernels tile *physical* detector rows on the v axis
+        # (no lane packing; the BP's lane axis is z) — pad rows to the
+        # sublane multiple instead of a full 128-lane tile.
         bv = min(_round_up8(max(geom.n_rows, 1)), LANE)
     elif geom.geom_type == "fan":
         # Fan is lane-packed like parallel, but its gathered-axis window is
@@ -403,7 +405,18 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
     elif geom.geom_type == "cone":
         # Cone has no FP view-blocking knob (views fold into the grid) but
         # a full Pallas BP: sweep the FP column tile and the BP (bg, bab).
-        return _autotune_cone(geom, batch, dtype, cand, reps, key)
+        from repro.kernels import fp_cone
+        return _autotune_viewfold(geom, batch, dtype, cand, reps, key,
+                                  fp_cone.fp_cone_sf_pallas,
+                                  fp_cone.bp_cone_sf_pallas)
+    elif geom.geom_type == "modular":
+        # Modular is structurally the exact cone pair (grid-folded views,
+        # per-view frames prefetched): the same FP-bu x BP-(bg, bab) sweep
+        # on the modular entry points.
+        from repro.kernels import fp_modular
+        return _autotune_viewfold(geom, batch, dtype, cand, reps, key,
+                                  fp_modular.fp_modular_sf_pallas,
+                                  fp_modular.bp_modular_sf_pallas)
     elif geom.geom_type == "fan":
         # Fan is Pallas end to end like parallel: same full fp/bp sweep.
         from repro.kernels import fp_fan
@@ -455,13 +468,13 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
     return cfg
 
 
-def _autotune_cone(geom: CTGeometry, batch: int, dtype, cand, reps: int,
-                   key: Tuple) -> KernelConfig:
-    """Cone sweep: FP column tile (bu) + BP gathered tile / view block
-    (bg, bab), mirroring the fan/parallel sweep now that the cone BP is a
-    real Pallas kernel.  The row tile bv stays on the heuristic (it tiles
-    physical detector rows, whose count the shape class already encodes)."""
-    from repro.kernels import fp_cone
+def _autotune_viewfold(geom: CTGeometry, batch: int, dtype, cand, reps: int,
+                       key: Tuple, fp_fn, bp_fn) -> KernelConfig:
+    """Sweep for the grid-folded-view kernels (exact cone, modular): FP
+    column tile (bu) + BP gathered tile / view block (bg, bab), mirroring
+    the fan/parallel sweep.  The row tile bv stays on the heuristic (it
+    tiles physical detector rows, whose count the shape class already
+    encodes); there is no FP ``ba`` knob — views fold into the grid."""
     base = heuristic_config(geom, batch, dtype)
     shape = ((batch,) if batch > 1 else ()) + geom.vol.shape
     f = jnp.ones(shape, dtype)
@@ -471,8 +484,7 @@ def _autotune_cone(geom: CTGeometry, batch: int, dtype, cand, reps: int,
     for bu in sorted({c.bu for c in cand}):
         cfg = base.replace(bu=bu, ba=1)
         try:
-            t = _time_call(lambda x: fp_cone.fp_cone_sf_pallas(
-                x, geom, config=cfg), f, reps=reps)
+            t = _time_call(lambda x: fp_fn(x, geom, config=cfg), f, reps=reps)
         except Exception:                             # noqa: BLE001
             continue
         if t < t_best:
@@ -481,8 +493,7 @@ def _autotune_cone(geom: CTGeometry, batch: int, dtype, cand, reps: int,
     for bg, bab in sorted({(c.bg, c.bab) for c in cand}):
         cfg = base.replace(bg=bg, bab=bab)
         try:
-            t = _time_call(lambda p: fp_cone.bp_cone_sf_pallas(
-                p, geom, config=cfg), y, reps=reps)
+            t = _time_call(lambda p: bp_fn(p, geom, config=cfg), y, reps=reps)
         except Exception:                             # noqa: BLE001
             continue
         if t < t_bp:

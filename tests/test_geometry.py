@@ -2,7 +2,7 @@ import numpy as np
 import pytest
 
 from repro.core.geometry import (CTGeometry, VolumeGeometry, cone_beam,
-                                 fan_beam, from_config,
+                                 fan_beam, from_config, helical_beam,
                                  parallel_beam)
 
 
@@ -74,6 +74,23 @@ def test_from_config_fan_roundtrip():
     assert g.sino_shape == (8, 2, 32)
     assert g.sod == 100.0 and g.sdd == 250.0
     assert g.key()
+
+
+def test_from_config_helical():
+    """'helical' configs build modular frames (compact n_turns/pitch
+    spelling) identical to the direct constructor."""
+    v = {"nx": 16, "ny": 16, "nz": 4}
+    cfg = {"geom_type": "helical", "n_turns": 2.0, "pitch": 4.0,
+           "n_angles": 12, "n_rows": 4, "n_cols": 24,
+           "sod": 100.0, "sdd": 200.0, "volume": v}
+    g = from_config(cfg)
+    assert g.geom_type == "modular"
+    assert g.key() == helical_beam(2.0, 4.0, 12, 4, 24,
+                                   VolumeGeometry(16, 16, 4),
+                                   sod=100.0, sdd=200.0).key()
+    src = np.asarray(g.source_pos)
+    # two turns: the azimuth wraps twice, z sweeps n_turns * pitch
+    assert np.isclose(src[-1, 2] - src[0, 2], 2.0 * 4.0 * (11 / 12))
 
 
 def test_modular_requires_vectors():

@@ -108,23 +108,36 @@ ENTRY %main (a: f32[8,128]) -> f32[8,128] {
 def test_elastic_remesh_plan_compiles(tmp_path):
     """Lose a pod's worth of chips -> plan_remesh shrinks the data axis ->
     the SAME training program lowers+compiles on the surviving mesh.
-    (Subprocess: needs its own forced host device count.)"""
+    (Subprocess: needs its own forced host device count.)
+
+    The plan logic is asserted at full scale (160 chips -> (8, 16)); the
+    compile proof runs a *smaller* remesh scenario (40 chips -> (2, 16), 32
+    forced host devices) with the layer count shrunk via cfg_overrides —
+    the 128-device full-model compile exceeded the subprocess timeout on
+    2-vCPU CI-class containers (see CHANGES.md PR 4), and neither the mesh
+    logic nor the sharding validity depends on the layer count."""
     from repro.runtime.fault import plan_remesh
-    new_shape = plan_remesh(n_healthy_chips=160, model_axis=16, pods=1)
-    assert new_shape == (8, 16)       # 128 of the surviving 160 chips
+    assert plan_remesh(n_healthy_chips=160, model_axis=16, pods=1) == (8, 16)
+    new_shape = plan_remesh(n_healthy_chips=40, model_axis=16, pods=1)
+    assert new_shape == (2, 16)       # 32 of the surviving 40 chips
     script = f"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=128"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
 import jax
+# Initialize the backend *before* importing dryrun: its module-level
+# XLA_FLAGS write forces 512 host devices for the CLI use case, and a
+# 512-device CPU client is most of what made this test time out.
+assert jax.device_count() == 32
 from repro.launch.dryrun import lower_cell
 mesh = jax.make_mesh({new_shape!r}, ("data", "model"))
-lowered, reason = lower_cell("qwen3-0.6b", "train_4k", mesh)
+lowered, reason = lower_cell("qwen3-0.6b", "train_4k", mesh,
+                             cfg_overrides={{"n_layers": 2}})
 assert reason is None
 lowered.compile()
 print("REMESH_OK")
 """
     out = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                         text=True, timeout=480,
+                         text=True, timeout=900,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                               "HOME": "/root"})
     assert out.returncode == 0, out.stderr[-2000:]
