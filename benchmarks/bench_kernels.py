@@ -76,6 +76,23 @@ def run(csv_rows: list):
             x, g, config=KernelConfig(ba=ba)), f, reps=reps)
         csv_rows.append((f"kernel/fp_par_sf/pallas_ba{ba}", t * 1e6, mode))
 
+    # mixed precision: bf16 tiles / f32 accumulate.  check_regression pairs
+    # every `_bf16` row with its f32 sibling (suffix stripped) and, on TPU,
+    # requires the bf16 variant to win on the batched BP rows below.
+    t = _t(lambda x: fp_parallel_sf_pallas(x, g, compute_dtype="bfloat16"),
+           f, reps=reps)
+    csv_rows.append(("kernel/fp_par_sf/pallas_bf16", t * 1e6,
+                     f"{mode};speedup_vs_f32={t_pal / max(t, 1e-12):.2f}x"))
+    t = _t(lambda p: bp_parallel_sf_pallas(p, g, compute_dtype="bfloat16"),
+           y, reps=reps)
+    csv_rows.append(("kernel/bp_par_sf/pallas_bf16", t * 1e6,
+                     f"{mode};speedup_vs_f32={t_bp / max(t, 1e-12):.2f}x"))
+    # BP stripe reuse (the bs knob): one sinogram stripe stays resident in
+    # VMEM across bs gathered-axis output tiles instead of being re-fetched.
+    t = _t(lambda p: bp_parallel_sf_pallas(p, g, bs=4), y, reps=reps)
+    csv_rows.append(("kernel/bp_par_sf/pallas_bs4", t * 1e6,
+                     f"{mode};speedup_vs_bs1={t_bp / max(t, 1e-12):.2f}x"))
+
     # ---- batched 2D training shape: seed vmap path vs lane packing ------- #
     # The paper's limited-angle DL regime: thin-z volume, single detector
     # row, per-step training batch.  This is where lane packing turns
@@ -98,6 +115,21 @@ def run(csv_rows: list):
     t_pack = _t(lambda x: fp_parallel_sf_pallas(x, g2), fb, reps=reps)
     csv_rows.append((f"kernel/fp2d_b{B}/pallas_lane_packed", t_pack * 1e6,
                      f"{mode};speedup_vs_vmap={t_vmap / max(t_pack, 1e-12):.2f}x"))
+
+    # batched BP at the same training shape: the memory-bound row the
+    # mixed-precision tentpole targets.  f32 lane-packed is the baseline;
+    # the `_bf16` sibling adds bf16 tiles AND bs=4 stripe reuse — the
+    # acceptance row for the >=1.5x batched-BP speedup (gated on TPU by
+    # check_regression's dtype-sibling pass).
+    t_bp_pack = _t(lambda p: bp_parallel_sf_pallas(p, g2), yb, reps=reps)
+    csv_rows.append((f"kernel/bp2d_b{B}/pallas_lane_packed",
+                     t_bp_pack * 1e6, mode))
+    t_bp_mp = _t(lambda p: bp_parallel_sf_pallas(
+        p, g2, bs=4, compute_dtype="bfloat16"), yb, reps=reps)
+    csv_rows.append((f"kernel/bp2d_b{B}/pallas_lane_packed_bf16",
+                     t_bp_mp * 1e6,
+                     f"{mode};speedup_vs_f32="
+                     f"{t_bp_pack / max(t_bp_mp, 1e-12):.2f}x"))
 
     # forward + VJP (one training step's projector work), both batch paths.
     # Gradients route through the registered matched pair (custom_vjp), so
@@ -134,10 +166,18 @@ def run(csv_rows: list):
         size=gf.sino_shape).astype(np.float32))
     t = _t(jax.jit(lambda x: ref.forward(x, gf, "sf")), ff)
     csv_rows.append(("kernel/fp_fan_sf/jnp_oracle", t * 1e6, "cpu-jit"))
-    t = _t(lambda x: fp_fan_sf_pallas(x, gf), ff, reps=reps)
-    csv_rows.append(("kernel/fp_fan_sf/pallas", t * 1e6, mode))
-    t = _t(lambda p: bp_fan_sf_pallas(p, gf), yf, reps=reps)
-    csv_rows.append(("kernel/bp_fan_sf/pallas", t * 1e6, mode))
+    t_fpf = _t(lambda x: fp_fan_sf_pallas(x, gf), ff, reps=reps)
+    csv_rows.append(("kernel/fp_fan_sf/pallas", t_fpf * 1e6, mode))
+    t_bpf = _t(lambda p: bp_fan_sf_pallas(p, gf), yf, reps=reps)
+    csv_rows.append(("kernel/bp_fan_sf/pallas", t_bpf * 1e6, mode))
+    t = _t(lambda x: fp_fan_sf_pallas(x, gf, compute_dtype="bfloat16"),
+           ff, reps=reps)
+    csv_rows.append(("kernel/fp_fan_sf/pallas_bf16", t * 1e6,
+                     f"{mode};speedup_vs_f32={t_fpf / max(t, 1e-12):.2f}x"))
+    t = _t(lambda p: bp_fan_sf_pallas(p, gf, compute_dtype="bfloat16"),
+           yf, reps=reps)
+    csv_rows.append(("kernel/bp_fan_sf/pallas_bf16", t * 1e6,
+                     f"{mode};speedup_vs_f32={t_bpf / max(t, 1e-12):.2f}x"))
 
     # thin-z lane-packed fan batch (seed vmap path vs packed path)
     gf2 = fan_beam(g2.n_angles, 1, g2.n_cols, vol2,
@@ -176,6 +216,14 @@ def run(csv_rows: list):
     t_bpc = _t(lambda p: bp_cone_sf_pallas(p, gc), yc, reps=reps)
     csv_rows.append(("kernel/bp_cone_sf/pallas", t_bpc * 1e6,
                      f"{mode};bp_over_fp={t_bpc / max(t_fpc, 1e-12):.2f}x"))
+    t = _t(lambda x: fp_cone_sf_pallas(x, gc, compute_dtype="bfloat16"),
+           fc, reps=reps)
+    csv_rows.append(("kernel/fp_cone_sf/pallas_bf16", t * 1e6,
+                     f"{mode};speedup_vs_f32={t_fpc / max(t, 1e-12):.2f}x"))
+    t = _t(lambda p: bp_cone_sf_pallas(p, gc, compute_dtype="bfloat16"),
+           yc, reps=reps)
+    csv_rows.append(("kernel/bp_cone_sf/pallas_bf16", t * 1e6,
+                     f"{mode};speedup_vs_f32={t_bpc / max(t, 1e-12):.2f}x"))
 
     # ---- modular beam (helical): the Pallas SF matched pair -------------- #
     # The modular pair is the cone pair generalized to per-view frames
@@ -201,6 +249,14 @@ def run(csv_rows: list):
     t_bpm = _t(lambda p: bp_modular_sf_pallas(p, gm), ym, reps=reps)
     csv_rows.append(("kernel/bp_modular_sf/pallas", t_bpm * 1e6,
                      f"{mode};bp_over_fp={t_bpm / max(t_fpm, 1e-12):.2f}x"))
+    t = _t(lambda x: fp_modular_sf_pallas(x, gm, compute_dtype="bfloat16"),
+           fm, reps=reps)
+    csv_rows.append(("kernel/fp_modular_sf/pallas_bf16", t * 1e6,
+                     f"{mode};speedup_vs_f32={t_fpm / max(t, 1e-12):.2f}x"))
+    t = _t(lambda p: bp_modular_sf_pallas(p, gm, compute_dtype="bfloat16"),
+           ym, reps=reps)
+    csv_rows.append(("kernel/bp_modular_sf/pallas_bf16", t * 1e6,
+                     f"{mode};speedup_vs_f32={t_bpm / max(t, 1e-12):.2f}x"))
 
     # ---- batched multi-row cone: exact view-folded batch vs lane packing - #
     # The ROADMAP's last kernel item: the exact cone pair folds batches into
@@ -238,6 +294,14 @@ def run(csv_rows: list):
                      t_bp_packed_b * 1e6,
                      f"{mode};speedup_vs_exact="
                      f"{t_bp_exact_b / max(t_bp_packed_b, 1e-12):.2f}x"))
+    # second batched-BP dtype-gate target: packed cone with bf16 tiles and
+    # bs=2 stripe reuse vs its f32 sibling row above.
+    t_bp_packed_mp = _t(lambda p: bp_cone_packed(
+        p, gp, bs=2, compute_dtype="bfloat16"), yp_b, reps=reps)
+    csv_rows.append((f"kernel/bp_cone3d_b{Bc}/pallas_packed_bf16",
+                     t_bp_packed_mp * 1e6,
+                     f"{mode};speedup_vs_f32="
+                     f"{t_bp_packed_b / max(t_bp_packed_mp, 1e-12):.2f}x"))
 
     # ---- 2D production-ish slice (the paper's 512^2 limited-angle) ------- #
     vol3 = VolumeGeometry(256, 256, 1)

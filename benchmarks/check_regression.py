@@ -16,10 +16,19 @@ an API-drift failure — a renamed entry point or a bench that stopped running
 is exactly what this gate exists to catch.  Ratios between WARN_RATIO and
 FAIL_RATIO print as warnings only (CPU noise on shared runners).
 
+A second pass gates the mixed-precision rows: every ``*_bf16`` row is paired
+with its f32 sibling (suffix stripped) and, on the batched BP rows (the
+memory-bound shapes the bf16 tentpole targets), the bf16 variant must be
+*faster* than f32 — but only when the row was measured on real TPU and sits
+above the jitter floor.  Interpret-mode runs (CI CPU) print the comparison
+as advisory warnings: interpreter per-element cost swamps the HBM-bandwidth
+effect bf16 tiles exist to exploit, so a CPU "slower" verdict is noise.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.run --only kernels > fresh.csv
     python -m benchmarks.check_regression fresh.csv              # gate
-    python -m benchmarks.check_regression fresh.csv --write-baseline
+    python -m benchmarks.check_regression r1.csv r2.csv r3.csv r4.csv \
+        --write-baseline     # per-row median across repeated runs
 """
 from __future__ import annotations
 
@@ -27,8 +36,9 @@ import argparse
 import json
 import pathlib
 import re
+import statistics
 import sys
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 BASELINE = pathlib.Path(__file__).resolve().parent / "baseline.json"
 # Per-stack calibration rows: jitted rows drift with XLA/CPU speed, Pallas
@@ -45,6 +55,13 @@ WARN_RATIO = 1.15
 # carry a meaningful ratio, so they warn instead of failing; the missing-row
 # (API drift) check still applies to them in full.
 JITTER_FLOOR_US = 5000.0
+# Mixed-precision sibling gate: bf16 rows must beat f32 on the batched BP
+# shapes (bp2d_b8, bp_cone3d_b4, ...).  DTYPE_TARGET is the tentpole's
+# acceptance speedup — below it the row warns, at/below 1.0x it fails
+# (TPU-derived rows above the jitter floor only).
+BF16_SUFFIX = "_bf16"
+BATCHED_BP = re.compile(r"^kernel/bp[^/]*_b\d+/")
+DTYPE_TARGET = 1.5
 
 
 def parse_csv(path: str) -> Dict[str, Tuple[float, str]]:
@@ -71,41 +88,88 @@ def _norm(fresh: Dict[str, Tuple[float, str]], name: str) -> float:
     return us / fresh[cal][0]
 
 
-def write_baseline(fresh: Dict[str, Tuple[float, str]],
+def check_dtype_siblings(fresh: Dict[str, Tuple[float, str]]):
+    """Pair every ``*_bf16`` row with its f32 sibling.  Batched BP rows are
+    the enforced ones; everything else is informational."""
+    fails, warns = [], []
+    for name in sorted(fresh):
+        if not name.endswith(BF16_SUFFIX) or not GATE.match(name):
+            continue
+        sib = name[: -len(BF16_SUFFIX)]
+        if sib not in fresh:
+            fails.append(f"{name}: f32 sibling row {sib!r} missing "
+                         f"(API drift?)")
+            continue
+        us, derived = fresh[name]
+        sib_us = fresh[sib][0]
+        speedup = sib_us / max(us, 1e-9)
+        line = f"{name}: {speedup:.2f}x vs f32 sibling ({us:.0f}us)"
+        if not BATCHED_BP.match(name):
+            continue                       # only batched BP rows are gated
+        if not derived.startswith("tpu") or us < JITTER_FLOOR_US:
+            if speedup < DTYPE_TARGET:
+                warns.append(line + " — advisory (interpret mode or "
+                             "sub-jitter row)")
+        elif speedup <= 1.0:
+            fails.append(line + f" — bf16 must beat f32 on batched BP "
+                         f"(target {DTYPE_TARGET}x)")
+        elif speedup < DTYPE_TARGET:
+            warns.append(line + f" — below the {DTYPE_TARGET}x target")
+    return fails, warns
+
+
+def write_baseline(runs: List[Dict[str, Tuple[float, str]]],
                    path: pathlib.Path) -> None:
-    entries = {
-        name: {"norm": round(_norm(fresh, name), 4), "us": round(us, 1)}
-        for name, (us, _) in sorted(fresh.items()) if GATE.match(name)
-    }
+    """Per-row median of the per-run *norms* (each run normalizes by its own
+    calibration row first, so run-to-run machine drift cancels before the
+    median is taken)."""
+    names = sorted(set().union(*[set(r) for r in runs]))
+    entries = {}
+    for name in names:
+        if not GATE.match(name):
+            continue
+        present = [r for r in runs if name in r]
+        entries[name] = {
+            "norm": round(statistics.median(_norm(r, name)
+                                            for r in present), 4),
+            "us": round(statistics.median(r[name][0] for r in present), 1),
+            "runs": len(present),
+        }
     payload = {
         "_meta": {
             "calibration_rows": {"cpu-jit": CAL_JIT, "pallas": CAL_PALLAS},
             "fail_ratio": FAIL_RATIO,
-            "note": "norm = us / us(same-stack calibration row), same run; "
-                    "regenerate with check_regression --write-baseline",
+            "note": "norm = median over runs of us / us(same-stack "
+                    "calibration row, same run); regenerate with "
+                    "check_regression r1.csv r2.csv ... --write-baseline",
         },
         "rows": entries,
     }
     path.write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"wrote {path} ({len(entries)} gated rows)")
+    print(f"wrote {path} ({len(entries)} gated rows, "
+          f"median over {len(runs)} run(s))")
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("csv", help="fresh bench_kernels CSV to check")
+    ap.add_argument("csv", nargs="+",
+                    help="fresh bench_kernels CSV(s); the gate checks the "
+                         "first, --write-baseline medians across all")
     ap.add_argument("--baseline", default=str(BASELINE))
     ap.add_argument("--write-baseline", action="store_true",
-                    help="regenerate the baseline from the CSV instead")
+                    help="regenerate the baseline from the CSV(s) instead")
     args = ap.parse_args()
 
-    fresh = parse_csv(args.csv)
-    for cal in (CAL_JIT, CAL_PALLAS):
-        if cal not in fresh:
-            print(f"FAIL: calibration row {cal!r} missing from {args.csv}")
-            return 1
+    runs = [parse_csv(p) for p in args.csv]
+    for path, run in zip(args.csv, runs):
+        for cal in (CAL_JIT, CAL_PALLAS):
+            if cal not in run:
+                print(f"FAIL: calibration row {cal!r} missing from {path}")
+                return 1
     if args.write_baseline:
-        write_baseline(fresh, pathlib.Path(args.baseline))
+        write_baseline(runs, pathlib.Path(args.baseline))
         return 0
+    fresh = runs[0]
 
     baseline = json.loads(pathlib.Path(args.baseline).read_text())["rows"]
     fails, warns = [], []
@@ -127,6 +191,10 @@ def main() -> int:
         if GATE.match(name):
             warns.append(f"{name}: new row not in baseline "
                          f"(regenerate with --write-baseline)")
+
+    dt_fails, dt_warns = check_dtype_siblings(fresh)
+    fails.extend(dt_fails)
+    warns.extend(dt_warns)
 
     for w in warns:
         print(f"WARN: {w}")

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core.fbp import fbp as _fbp
 from repro.core.geometry import CTGeometry
-from repro.kernels import ops
+from repro.kernels import ops, precision
 from repro.kernels.tune import KernelConfig
 
 
@@ -34,13 +34,18 @@ class Projector:
     def __init__(self, geom: CTGeometry, model: str = "sf",
                  backend: str = "auto",
                  config: Optional[KernelConfig] = None,
-                 mode: str = "auto"):
+                 mode: str = "auto", compute_dtype=None):
         """``mode`` selects between the exact kernels and the approximate
         lane-packed cone pair: "exact" always uses the exact kernels,
         "packed" forces the packed pair (small-cone-angle pre-resample),
         "auto" (default) uses packed only when the geometry's derived error
         bound is under tolerance (see ``repro.kernels.tune.packed_cone_ok``).
-        Non-cone geometries are unaffected by ``mode``."""
+        Non-cone geometries are unaffected by ``mode``.
+
+        ``compute_dtype`` sets the kernel tile precision ("bfloat16" |
+        "float32"; None follows the input dtype): tiles stream at that
+        dtype, accumulation stays f32, outputs keep the input's dtype —
+        see kernels/precision.py for the policy and its tolerance model."""
         if model not in ("sf", "joseph"):
             raise ValueError(f"unknown projector model {model!r}")
         if mode not in ("auto", "exact", "packed"):
@@ -57,17 +62,31 @@ class Projector:
         self.backend = backend
         self.config = config
         self.mode = mode
+        # Validates eagerly (raises ValueError on junk) and canonicalizes
+        # aliases ("bf16" -> "bfloat16") so the op-cache key is stable.
+        self.compute_dtype = precision.normalize(compute_dtype)
+
+    @classmethod
+    def from_model_config(cls, geom: CTGeometry, model_config, **kwargs):
+        """Build a projector honoring a ``models.config.ModelConfig``: its
+        ``compute_dtype`` (the field the LM stack already applies to its
+        matmuls) becomes the kernel tile precision, so a reconstruction
+        head shares one precision policy with the model around it."""
+        kwargs.setdefault("compute_dtype",
+                          getattr(model_config, "compute_dtype", None))
+        return cls(geom, **kwargs)
 
     # -- linear ops -------------------------------------------------------- #
     def __call__(self, volume):
         return ops.forward_project(volume, self.geom, self.model,
-                                   self.backend, self.config, self.mode)
+                                   self.backend, self.config, self.mode,
+                                   self.compute_dtype)
 
     forward = __call__
 
     def backproject(self, sino):
         return ops.back_project(sino, self.geom, self.model, self.backend,
-                                self.config, self.mode)
+                                self.config, self.mode, self.compute_dtype)
 
     @property
     def T(self):
@@ -109,5 +128,7 @@ class Projector:
     def __repr__(self):
         g = self.geom
         mode = f", mode={self.mode}" if self.mode != "auto" else ""
-        return (f"Projector({g.geom_type}, model={self.model}{mode}, "
+        cdt = (f", compute_dtype={self.compute_dtype}"
+               if self.compute_dtype is not None else "")
+        return (f"Projector({g.geom_type}, model={self.model}{mode}{cdt}, "
                 f"vol={g.vol.shape}, sino={g.sino_shape})")

@@ -60,7 +60,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.geometry import CTGeometry
-from repro.kernels import ref, tune
+from repro.kernels import precision, ref, tune
 from repro.kernels.footprint import trapezoid_pixel_weight
 
 
@@ -252,11 +252,11 @@ def _fp_cone_kernel(params_ref,        # SMEM (n_views, 20)
         obl = jnp.sqrt(1.0 + (zt * zt) / jnp.maximum(rt2_w, 1e-9))
         Wz = ov * obl                                        # (bv, NZW)
         fwin = f_ref[start + w, 0, pl.ds(z0i, NZW)]          # (NZW,)
-        rv = jax.lax.dot_general(Wz, fwin[:, None],
+        rv = jax.lax.dot_general(precision.cast_like(Wz, fwin), fwin[:, None],
                                  (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)[:, 0]
         acc = acc + wu[:, w][:, None] * rv[None, :]
-    out_ref[0] += acc.astype(out_ref.dtype)
+    precision.store_tile(out_ref, 0, acc)
 
 
 def _run_group(fb, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
@@ -298,7 +298,8 @@ def _run_group(fb, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
             out_specs=pl.BlockSpec((1, bu, bv),
                                    lambda a, ub, vb, l, *_: (a, ub, vb)),
         ),
-        out_shape=jax.ShapeDtypeStruct((B * na, nup, nvp), fs.dtype),
+        # output buffer is the cross-step accumulator: always f32
+        out_shape=jax.ShapeDtypeStruct((B * na, nup, nvp), jnp.float32),
         interpret=_interpret(),
     )(jnp.asarray(params), fs)
     return out.reshape(B, na, nup, nvp)
@@ -306,15 +307,18 @@ def _run_group(fb, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
 
 def fp_cone_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
                       bv: Optional[int] = None,
-                      config: Optional[tune.KernelConfig] = None):
+                      config: Optional[tune.KernelConfig] = None,
+                      compute_dtype=None):
     """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or batched
     f: (batch, nx, ny, nz) -> (batch, ...).  Flat detector."""
     assert geom.geom_type == "cone" and geom.detector_type == "flat"
     if f.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
     batched = f.ndim == 4
-    fb = f if batched else f[None]
-    cfg = tune.resolve_config(geom, fb.shape[0], config, dtype=f.dtype,
+    out_dtype = f.dtype
+    cdt = precision.resolve(compute_dtype, f.dtype)
+    fb = precision.cast_in(f if batched else f[None], cdt)
+    cfg = tune.resolve_config(geom, fb.shape[0], config, dtype=cdt,
                               bu=bu, bv=bv)
     px, py, order = _view_params_cone(geom)
     outs = []
@@ -327,7 +331,7 @@ def fp_cone_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
     out = jnp.concatenate(outs, axis=1)                    # (B, na, NUp, NVp)
     out = out[:, :, :geom.n_cols, :geom.n_rows]
     inv = np.argsort(order)
-    out = jnp.swapaxes(out[:, inv], 2, 3)                  # (B, na, nv, nu)
+    out = jnp.swapaxes(out[:, inv], 2, 3).astype(out_dtype)  # (B, na, nv, nu)
     return out if batched else out[0]
 
 
@@ -399,7 +403,8 @@ def _bp_cone_kernel(params_ref,        # SMEM (n_views, 20)
                    + jax.lax.broadcasted_iota(jnp.float32, (1, Wu), 1)) * du
         el = uk - du / 2.0                                   # (1, Wu)
         wgt = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
-        rows = jax.lax.dot_general(wgt, qwin,                # (bg, bv)
+        rows = jax.lax.dot_general(precision.cast_like(wgt, qwin),
+                                   qwin,                     # (bg, bv)
                                    (((1,), (0,)), ((), ())),
                                    preferred_element_type=jnp.float32)
         # Transposed per-element axial resample: every gathered element has
@@ -419,7 +424,7 @@ def _bp_cone_kernel(params_ref,        # SMEM (n_views, 20)
                 rows[g][None, :], Wz, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32))         # (1, nz)
         acc = acc + jnp.concatenate(zcols, axis=0)
-    out_ref[:, 0, :] += acc.astype(out_ref.dtype)
+    precision.store_tile(out_ref, (slice(None), 0, slice(None)), acc)
 
 
 def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
@@ -461,7 +466,8 @@ def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
             out_specs=pl.BlockSpec((bg, 1, nz),
                                    lambda gall, l, vb, ab, *_: (gall, l, 0)),
         ),
-        out_shape=jax.ShapeDtypeStruct((B * ngp, nl, nz), qs.dtype),
+        # output buffer is the cross-step accumulator: always f32
+        out_shape=jax.ShapeDtypeStruct((B * ngp, nl, nz), jnp.float32),
         interpret=_interpret(),
     )(jnp.asarray(params), qs)
     return out.reshape(B, ngp, nl, nz)[:, :ng]
@@ -469,7 +475,8 @@ def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
 
 def bp_cone_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
                       bv: Optional[int] = None, bab: Optional[int] = None,
-                      config: Optional[tune.KernelConfig] = None):
+                      config: Optional[tune.KernelConfig] = None,
+                      compute_dtype=None):
     """sino: (n_angles, n_rows, n_cols) -> volume (nx, ny, nz), or batched
     sino: (batch, ...) -> (batch, nx, ny, nz).  Flat detector.
 
@@ -481,14 +488,16 @@ def bp_cone_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
     if sino.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
     batched = sino.ndim == 4
+    out_dtype = sino.dtype
+    cdt = precision.resolve(compute_dtype, sino.dtype)
     qb = sino if batched else sino[None]
-    cfg = tune.resolve_config(geom, qb.shape[0], config, dtype=sino.dtype,
+    cfg = tune.resolve_config(geom, qb.shape[0], config, dtype=cdt,
                               bg=bg, bv=bv, bab=bab)
     px, py, order = _view_params_cone(geom)
     q = jnp.swapaxes(qb, 2, 3)                             # (B, na, nu, nv)
-    q = q[:, order]                                        # group-major views
+    q = precision.cast_in(q[:, order], cdt)                # group-major views
     nax = px.shape[0]
-    acc = jnp.zeros((qb.shape[0],) + geom.vol.shape, q.dtype)
+    acc = jnp.zeros((qb.shape[0],) + geom.vol.shape, jnp.float32)
     if nax:
         acc = acc + _run_bp_group(q[:, :nax], px, geom, True,
                                   cfg.bg, cfg.bv, cfg.bab)
@@ -496,6 +505,7 @@ def bp_cone_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
         accy = _run_bp_group(q[:, nax:], py, geom, False,
                              cfg.bg, cfg.bv, cfg.bab)
         acc = acc + jnp.swapaxes(accy, 1, 2)
+    acc = acc.astype(out_dtype)
     return acc if batched else acc[0]
 
 
@@ -590,7 +600,8 @@ def cone_packed_error_bound(geom: CTGeometry) -> float:
 
 def fp_cone_packed(f, geom: CTGeometry, bu: Optional[int] = None,
                    bv: Optional[int] = None, ba: Optional[int] = None,
-                   config: Optional[tune.KernelConfig] = None):
+                   config: Optional[tune.KernelConfig] = None,
+                   compute_dtype=None):
     """Lane-packed cone forward projection (axial pre-resample).
 
     f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or batched
@@ -607,23 +618,27 @@ def fp_cone_packed(f, geom: CTGeometry, bu: Optional[int] = None,
         raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
     from repro.kernels import fp_fan                 # late: fan imports us
     batch = f.shape[0] if f.ndim == 4 else 1
-    cfg = tune.resolve_config(geom, batch, config, dtype=f.dtype,
+    out_dtype = f.dtype
+    cdt = precision.resolve(compute_dtype, f.dtype)
+    cfg = tune.resolve_config(geom, batch, config, dtype=cdt,
                               bu=bu, bv=bv, ba=ba, packed=True)
     Fz = jnp.asarray(_z_overlap_cone_packed(geom))             # (nz, nv)
     if f.ndim == 3:
         g = jnp.einsum("xyz,zv->xyv", f, Fz)                   # pre-resample
-        out = fp_fan._fp_core(g, geom, cfg)                    # (na, nu, nv)
-        return jnp.swapaxes(out, 1, 2)                         # (na, nv, nu)
+        out = fp_fan._fp_core(precision.cast_in(g, cdt), geom, cfg)
+        return jnp.swapaxes(out, 1, 2).astype(out_dtype)       # (na, nv, nu)
     g = jnp.einsum("bxyz,zv->xybv", f, Fz)                     # (nx, ny, B, nv)
     g = g.reshape(geom.vol.nx, geom.vol.ny, batch * geom.n_rows)
-    out = fp_fan._fp_core(g, geom, cfg)                        # (na, nu, B*nv)
+    out = fp_fan._fp_core(precision.cast_in(g, cdt), geom, cfg)
     out = out.reshape(geom.n_angles, geom.n_cols, batch, geom.n_rows)
-    return jnp.transpose(out, (2, 0, 3, 1))                    # (B, na, nv, nu)
+    return jnp.transpose(out, (2, 0, 3, 1)).astype(out_dtype)  # (B, na, nv, nu)
 
 
 def bp_cone_packed(sino, geom: CTGeometry, bg: Optional[int] = None,
                    bv: Optional[int] = None, bab: Optional[int] = None,
-                   config: Optional[tune.KernelConfig] = None):
+                   bs: Optional[int] = None,
+                   config: Optional[tune.KernelConfig] = None,
+                   compute_dtype=None):
     """Exact transpose of ``fp_cone_packed`` (incl. the batched path): the
     fan BP kernel's transposed transaxial contraction followed by the
     transposed axial pre-resample einsum."""
@@ -635,18 +650,20 @@ def bp_cone_packed(sino, geom: CTGeometry, bg: Optional[int] = None,
         raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
     from repro.kernels import fp_fan                 # late: fan imports us
     batch = sino.shape[0] if sino.ndim == 4 else 1
-    cfg = tune.resolve_config(geom, batch, config, dtype=sino.dtype,
-                              bg=bg, bv=bv, bab=bab, packed=True)
+    out_dtype = sino.dtype
+    cdt = precision.resolve(compute_dtype, sino.dtype)
+    cfg = tune.resolve_config(geom, batch, config, dtype=cdt,
+                              bg=bg, bv=bv, bab=bab, bs=bs, packed=True)
     Fz = jnp.asarray(_z_overlap_cone_packed(geom))             # (nz, nv)
     if sino.ndim == 3:
-        q = jnp.swapaxes(sino, 1, 2)                           # (na, nu, nv)
+        q = precision.cast_in(jnp.swapaxes(sino, 1, 2), cdt)   # (na, nu, nv)
         acc = fp_fan._bp_core(q, geom, cfg)                    # (nx, ny, nv)
-        return jnp.einsum("xyv,zv->xyz", acc, Fz)              # axial transpose
+        return jnp.einsum("xyv,zv->xyz", acc, Fz).astype(out_dtype)
     q = jnp.transpose(sino, (1, 3, 0, 2))                      # (na, nu, B, nv)
     q = q.reshape(geom.n_angles, geom.n_cols, batch * geom.n_rows)
-    acc = fp_fan._bp_core(q, geom, cfg)                        # (nx, ny, B*nv)
+    acc = fp_fan._bp_core(precision.cast_in(q, cdt), geom, cfg)
     acc = acc.reshape(geom.vol.nx, geom.vol.ny, batch, geom.n_rows)
-    return jnp.einsum("xybv,zv->bxyz", acc, Fz)
+    return jnp.einsum("xybv,zv->bxyz", acc, Fz).astype(out_dtype)
 
 
 def fp_cone_packed_ref(f, geom: CTGeometry):

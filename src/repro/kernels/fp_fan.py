@@ -44,7 +44,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.geometry import CTGeometry
-from repro.kernels import tune
+from repro.kernels import precision, tune
 from repro.kernels.footprint import trapezoid_pixel_weight
 from repro.kernels.fp_cone import (_corner_trapezoid, _mag_bounds,
                                    _u_window_size_div, _view_params_cone)
@@ -147,9 +147,9 @@ def _fp_fan_kernel(params_ref,          # SMEM (n_views, 20)
         uk = u_first + du * jax.lax.broadcasted_iota(jnp.float32, (bu, 1), 0)
         el = uk - du / 2.0                                     # (bu, 1)
         wgt = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
-        out_ref[j] += jax.lax.dot_general(
-            wgt, win, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+        precision.store_tile(out_ref, j, jax.lax.dot_general(
+            precision.cast_like(wgt, win), win, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))
 
 
 def _run_fp_group(g, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
@@ -180,7 +180,8 @@ def _run_fp_group(g, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
             out_specs=pl.BlockSpec((ba, bu, bv),
                                    lambda ab, ub, vb, l, *_: (ab, ub, vb)),
         ),
-        out_shape=jax.ShapeDtypeStruct((nap, nup, nvp), g.dtype),
+        # f32 cross-step accumulator regardless of the tile dtype.
+        out_shape=jax.ShapeDtypeStruct((nap, nup, nvp), jnp.float32),
         interpret=_interpret(),
     )(jnp.asarray(params), g)
     return out[:na]
@@ -206,25 +207,32 @@ def _fp_core(g, geom: CTGeometry, cfg: tune.KernelConfig):
 
 def fp_fan_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
                      bv: Optional[int] = None, ba: Optional[int] = None,
-                     config: Optional[tune.KernelConfig] = None):
+                     config: Optional[tune.KernelConfig] = None,
+                     compute_dtype=None):
     """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or lane-packed
-    batched f: (batch, nx, ny, nz) -> (batch, n_angles, n_rows, n_cols)."""
+    batched f: (batch, nx, ny, nz) -> (batch, n_angles, n_rows, n_cols).
+    ``compute_dtype`` selects the tile dtype at the VMEM boundary (None =
+    follow ``f.dtype``); accumulation stays f32, output is ``f.dtype``."""
     assert geom.geom_type == "fan"
     if f.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
     batch = f.shape[0] if f.ndim == 4 else 1
-    cfg = tune.resolve_config(geom, batch, config, dtype=f.dtype,
+    out_dtype = f.dtype
+    cdt = precision.resolve(compute_dtype, f.dtype)
+    cfg = tune.resolve_config(geom, batch, config, dtype=cdt,
                               bu=bu, bv=bv, ba=ba)
     Fz = jnp.asarray(_z_overlap_matrix(geom))                  # (nz, nv)
     if f.ndim == 3:
         g = jnp.einsum("xyz,zv->xyv", f, Fz)                   # axial footprint
+        g = precision.cast_in(g, cdt)
         out = _fp_core(g, geom, cfg)                           # (na, nu, nv)
-        return jnp.swapaxes(out, 1, 2)                         # (na, nv, nu)
+        return jnp.swapaxes(out, 1, 2).astype(out_dtype)       # (na, nv, nu)
     g = jnp.einsum("bxyz,zv->xybv", f, Fz)                     # (nx, ny, B, nv)
     g = g.reshape(geom.vol.nx, geom.vol.ny, batch * geom.n_rows)
+    g = precision.cast_in(g, cdt)
     out = _fp_core(g, geom, cfg)                               # (na, nu, B*nv)
     out = out.reshape(geom.n_angles, geom.n_cols, batch, geom.n_rows)
-    return jnp.transpose(out, (2, 0, 3, 1))                    # (B, na, nv, nu)
+    return jnp.transpose(out, (2, 0, 3, 1)).astype(out_dtype)
 
 
 # --------------------------------------------------------------------------- #
@@ -232,12 +240,15 @@ def fp_fan_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
 # --------------------------------------------------------------------------- #
 def _bp_fan_kernel(params_ref,          # SMEM (n_views, 20)
                    q_ref,               # VMEM (bab, NU, bv) sino stripes
-                   out_ref,             # VMEM (bg, 1, bv) volume tile
+                   out_ref,             # VMEM (bs*bg, 1, bv) volume tile
                    *, Wu: int, u0: float, du: float, sdd: float, dxv: float,
-                   nu: int, bg: int, bv: int, bab: int, curved: bool):
-    """One program: accumulate ``bab`` views into one (bg, bv) volume tile —
-    the exact transpose of ``_fp_fan_kernel`` (same corner-projected
-    breakpoints, transposed contraction)."""
+                   nu: int, bg: int, bv: int, bab: int, bs: int,
+                   curved: bool):
+    """One program: accumulate ``bab`` views into ``bs`` consecutive
+    (bg, bv) volume sub-tiles — the exact transpose of ``_fp_fan_kernel``
+    (same corner-projected breakpoints, transposed contraction).  Stripe
+    reuse (bs > 1) serves ``bs`` gathered sub-tiles per stripe residency;
+    see ``fp_par._bp_kernel``."""
     gb = pl.program_id(0)
     li = pl.program_id(1)
     ab = pl.program_id(3)
@@ -247,10 +258,7 @@ def _bp_fan_kernel(params_ref,          # SMEM (n_views, 20)
         out_ref[...] = jnp.zeros_like(out_ref)
 
     lif = li.astype(jnp.float32)
-    gi0 = gb * bg
-    gi_abs = gi0 + jax.lax.broadcasted_iota(jnp.float32, (bg, 1), 0)
-
-    acc = jnp.zeros((bg, bv), jnp.float32)
+    subs = [jnp.zeros((bg, bv), jnp.float32) for _ in range(bs)]
     for j in range(bab):
         a = ab * bab + j
         P = [params_ref[a, i] for i in range(20)]
@@ -265,28 +273,34 @@ def _bp_fan_kernel(params_ref,          # SMEM (n_views, 20)
                 return sdd * jnp.arctan2(qg, lg)
             return sdd * qg / lg
 
-        uc_a = uc_of(gi0.astype(jnp.float32))
-        uc_b = uc_of((gi0 + bg - 1).astype(jnp.float32))
-        ustart = jnp.floor(
-            (jnp.minimum(uc_a, uc_b) - u0) / du).astype(jnp.int32) - (
-            Wu - jnp.abs(jnp.ceil((uc_b - uc_a) / du)).astype(jnp.int32)) // 2
-        ustart = jnp.clip(ustart, 0, max(nu - Wu, 0))
+        for sj in range(bs):
+            gi0 = (gb * bs + sj) * bg
+            gi_abs = gi0 + jax.lax.broadcasted_iota(jnp.float32, (bg, 1), 0)
+            uc_a = uc_of(gi0.astype(jnp.float32))
+            uc_b = uc_of((gi0 + bg - 1).astype(jnp.float32))
+            ustart = jnp.floor(
+                (jnp.minimum(uc_a, uc_b) - u0) / du).astype(jnp.int32) - (
+                Wu - jnp.abs(jnp.ceil((uc_b - uc_a) / du)).astype(
+                    jnp.int32)) // 2
+            ustart = jnp.clip(ustart, 0, max(nu - Wu, 0))
 
-        qwin = q_ref[j, pl.ds(ustart, Wu), :]                  # (Wu, bv)
-        t0, t1, t2, t3, h = _fan_trapezoid(P, gi_abs, q0, l0, lif, sdd, dxv,
-                                           curved)             # (bg, 1)
-        uk = u0 + (ustart.astype(jnp.float32)
-                   + jax.lax.broadcasted_iota(jnp.float32, (1, Wu), 1)) * du
-        el = uk - du / 2.0                                     # (1, Wu)
-        wgt = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
-        acc += jax.lax.dot_general(
-            wgt, qwin, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-    out_ref[:, 0, :] += acc.astype(out_ref.dtype)
+            qwin = q_ref[j, pl.ds(ustart, Wu), :]              # (Wu, bv)
+            t0, t1, t2, t3, h = _fan_trapezoid(P, gi_abs, q0, l0, lif, sdd,
+                                               dxv, curved)    # (bg, 1)
+            uk = u0 + (ustart.astype(jnp.float32)
+                       + jax.lax.broadcasted_iota(
+                           jnp.float32, (1, Wu), 1)) * du
+            el = uk - du / 2.0                                 # (1, Wu)
+            wgt = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
+            subs[sj] = subs[sj] + jax.lax.dot_general(
+                precision.cast_like(wgt, qwin), qwin, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    acc = subs[0] if bs == 1 else jnp.concatenate(subs, axis=0)
+    precision.store_tile(out_ref, (slice(None), 0, slice(None)), acc)
 
 
 def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
-                  bg: int, bv: int, bab: int = 1):
+                  bg: int, bv: int, bab: int = 1, bs: int = 1):
     """q: (na_group, NUp, NVp) u-major sino slice for this view group.
     Returns the gathered-axis-major volume accumulator (NG, NL, NVp)."""
     ng, nl = ((geom.vol.nx, geom.vol.ny) if gathered_x
@@ -294,13 +308,15 @@ def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
     na, nup, nvp = q.shape
     params, q, bab = _pad_views(params, bab, q)
     nap = params.shape[0]
-    ngp = _round_up(ng, bg)
+    bs = max(1, min(bs, max(1, ng // bg)))    # don't block past the axis
+    bstr = bg * bs                            # gathered voxels per program
+    ngp = _round_up(ng, bstr)
     Wu = _u_window_size_div(geom, bg, nup)
-    grid = (ngp // bg, nl, nvp // bv, nap // bab)
+    grid = (ngp // bstr, nl, nvp // bv, nap // bab)
     kernel = functools.partial(
         _bp_fan_kernel, Wu=Wu, u0=float(geom.u_coords()[0]),
         du=geom.pixel_width, sdd=geom.sdd, dxv=geom.vol.dx, nu=nup,
-        bg=bg, bv=bv, bab=bab, curved=geom.detector_type == "curved")
+        bg=bg, bv=bv, bab=bab, bs=bs, curved=geom.detector_type == "curved")
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -308,10 +324,11 @@ def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
             grid=grid,
             in_specs=[pl.BlockSpec((bab, nup, bv),
                                    lambda gb, l, vb, ab, *_: (ab, 0, vb))],
-            out_specs=pl.BlockSpec((bg, 1, bv),
+            out_specs=pl.BlockSpec((bstr, 1, bv),
                                    lambda gb, l, vb, ab, *_: (gb, l, vb)),
         ),
-        out_shape=jax.ShapeDtypeStruct((ngp, nl, nvp), q.dtype),
+        # f32 cross-step accumulator regardless of the stripe dtype.
+        out_shape=jax.ShapeDtypeStruct((ngp, nl, nvp), jnp.float32),
         interpret=_interpret(),
     )(jnp.asarray(params), q)
     return out[:ng]
@@ -326,39 +343,47 @@ def _bp_core(q, geom: CTGeometry, cfg: tune.KernelConfig):
     px, py, order = _view_params_cone(geom)
     q = q[order]                                               # group-major
     nax = px.shape[0]
-    acc = jnp.zeros((geom.vol.nx, geom.vol.ny, nvp), q.dtype)
+    acc = jnp.zeros((geom.vol.nx, geom.vol.ny, nvp), jnp.float32)
     if nax:
         acc = acc + _run_bp_group(q[:nax], px, geom, True,
-                                  cfg.bg, cfg.bv, cfg.bab)
+                                  cfg.bg, cfg.bv, cfg.bab, cfg.bs)
     if py.shape[0]:
         accy = _run_bp_group(q[nax:], py, geom, False,
-                             cfg.bg, cfg.bv, cfg.bab)
+                             cfg.bg, cfg.bv, cfg.bab, cfg.bs)
         acc = acc + jnp.swapaxes(accy, 0, 1)
     return acc[:, :, :nv_lanes]
 
 
 def bp_fan_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
                      bv: Optional[int] = None, bab: Optional[int] = None,
-                     config: Optional[tune.KernelConfig] = None):
+                     bs: Optional[int] = None,
+                     config: Optional[tune.KernelConfig] = None,
+                     compute_dtype=None):
     """sino: (n_angles, n_rows, n_cols) -> volume (nx, ny, nz), or
     lane-packed batched sino: (batch, ...) -> (batch, nx, ny, nz).
-    Exact transpose of ``fp_fan_sf_pallas`` (incl. the batched path)."""
+    Exact transpose of ``fp_fan_sf_pallas`` (incl. the batched path).
+    ``compute_dtype`` selects the stripe dtype at the VMEM boundary; ``bs``
+    overrides the stripe-reuse blocking factor."""
     assert geom.geom_type == "fan"
     if sino.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
     batch = sino.shape[0] if sino.ndim == 4 else 1
-    cfg = tune.resolve_config(geom, batch, config, dtype=sino.dtype,
-                              bg=bg, bv=bv, bab=bab)
+    out_dtype = sino.dtype
+    cdt = precision.resolve(compute_dtype, sino.dtype)
+    cfg = tune.resolve_config(geom, batch, config, dtype=cdt,
+                              bg=bg, bv=bv, bab=bab, bs=bs)
     Fz = jnp.asarray(_z_overlap_matrix(geom))                  # (nz, nv)
     if sino.ndim == 3:
         q = jnp.swapaxes(sino, 1, 2)                           # (na, nu, nv)
+        q = precision.cast_in(q, cdt)
         acc = _bp_core(q, geom, cfg)                           # (nx, ny, nv)
-        return jnp.einsum("xyv,zv->xyz", acc, Fz)              # axial transpose
+        return jnp.einsum("xyv,zv->xyz", acc, Fz).astype(out_dtype)
     q = jnp.transpose(sino, (1, 3, 0, 2))                      # (na, nu, B, nv)
     q = q.reshape(geom.n_angles, geom.n_cols, batch * geom.n_rows)
+    q = precision.cast_in(q, cdt)
     acc = _bp_core(q, geom, cfg)                               # (nx, ny, B*nv)
     acc = acc.reshape(geom.vol.nx, geom.vol.ny, batch, geom.n_rows)
-    return jnp.einsum("xybv,zv->bxyz", acc, Fz)
+    return jnp.einsum("xybv,zv->bxyz", acc, Fz).astype(out_dtype)
 
 
 def register():

@@ -63,7 +63,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.geometry import CTGeometry
-from repro.kernels import ref, tune
+from repro.kernels import precision, ref, tune
 from repro.kernels.footprint import trapezoid_pixel_weight
 from repro.kernels.fp_cone import _corner_trapezoid, _interpret, _round_up
 
@@ -301,11 +301,11 @@ def _fp_modular_kernel(params_ref,     # SMEM (n_views, 24)
                        / jnp.maximum(rt2_w, 1e-9))
         Wz = ov * obl                                        # (bv, NZW)
         fwin = f_ref[start + w, 0, pl.ds(z0i, NZW)]          # (NZW,)
-        rv = jax.lax.dot_general(Wz, fwin[:, None],
+        rv = jax.lax.dot_general(precision.cast_like(Wz, fwin), fwin[:, None],
                                  (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)[:, 0]
         acc = acc + wu[:, w][:, None] * rv[None, :]
-    out_ref[0] += acc.astype(out_ref.dtype)
+    precision.store_tile(out_ref, 0, acc)
 
 
 def _fp_window_sizes(geom: CTGeometry, bu: int, bv: int, ng: int, nz: int,
@@ -353,7 +353,8 @@ def _run_fp_group(fb, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
             out_specs=pl.BlockSpec((1, bu, bv),
                                    lambda a, ub, vb, l, *_: (a, ub, vb)),
         ),
-        out_shape=jax.ShapeDtypeStruct((B * na, nup, nvp), fs.dtype),
+        # output buffer is the cross-step accumulator: always f32
+        out_shape=jax.ShapeDtypeStruct((B * na, nup, nvp), jnp.float32),
         interpret=_interpret(),
     )(jnp.asarray(params), fs)
     return out.reshape(B, na, nup, nvp)
@@ -361,7 +362,8 @@ def _run_fp_group(fb, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
 
 def fp_modular_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
                          bv: Optional[int] = None,
-                         config: Optional[tune.KernelConfig] = None):
+                         config: Optional[tune.KernelConfig] = None,
+                         compute_dtype=None):
     """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or batched
     f: (batch, nx, ny, nz) -> (batch, ...).  Axial modular frames."""
     assert geom.geom_type == "modular"
@@ -370,8 +372,10 @@ def fp_modular_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
     if f.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
     batched = f.ndim == 4
-    fb = f if batched else f[None]
-    cfg = tune.resolve_config(geom, fb.shape[0], config, dtype=f.dtype,
+    out_dtype = f.dtype
+    cdt = precision.resolve(compute_dtype, f.dtype)
+    fb = precision.cast_in(f if batched else f[None], cdt)
+    cfg = tune.resolve_config(geom, fb.shape[0], config, dtype=cdt,
                               bu=bu, bv=bv)
     px, py, order, sdd_ref = _view_params_modular(geom, fr)
     mag_min, mag_max = _mag_bounds_modular(geom, fr)
@@ -387,7 +391,7 @@ def fp_modular_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
     out = jnp.concatenate(outs, axis=1)                # (B, na, NUp, NVp)
     out = out[:, :, :geom.n_cols, :geom.n_rows]
     inv = np.argsort(order)
-    out = jnp.swapaxes(out[:, inv], 2, 3)              # (B, na, nv, nu)
+    out = jnp.swapaxes(out[:, inv], 2, 3).astype(out_dtype)  # (B, na, nv, nu)
     return out if batched else out[0]
 
 
@@ -454,7 +458,8 @@ def _bp_modular_kernel(params_ref,     # SMEM (n_views, 24)
                    + jax.lax.broadcasted_iota(jnp.float32, (1, Wu), 1)) * du
         el = uk - du / 2.0                                   # (1, Wu)
         wgt = trapezoid_pixel_weight(el, el + du, t0, t1, t2, t3, h)
-        rows = jax.lax.dot_general(wgt, qwin,                # (bg, bv)
+        rows = jax.lax.dot_general(precision.cast_like(wgt, qwin),
+                                   qwin,                     # (bg, bv)
                                    (((1,), (0,)), ((), ())),
                                    preferred_element_type=jnp.float32)
         zcols = []
@@ -474,7 +479,7 @@ def _bp_modular_kernel(params_ref,     # SMEM (n_views, 24)
                 rows[g][None, :], Wz, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32))         # (1, nz)
         acc = acc + jnp.concatenate(zcols, axis=0)
-    out_ref[:, 0, :] += acc.astype(out_ref.dtype)
+    precision.store_tile(out_ref, (slice(None), 0, slice(None)), acc)
 
 
 def _u_window_size_modular(geom: CTGeometry, bg: int, nu: int,
@@ -524,7 +529,8 @@ def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
             out_specs=pl.BlockSpec((bg, 1, nz),
                                    lambda gall, l, vb, ab, *_: (gall, l, 0)),
         ),
-        out_shape=jax.ShapeDtypeStruct((B * ngp, nl, nz), qs.dtype),
+        # output buffer is the cross-step accumulator: always f32
+        out_shape=jax.ShapeDtypeStruct((B * ngp, nl, nz), jnp.float32),
         interpret=_interpret(),
     )(jnp.asarray(params), qs)
     return out.reshape(B, ngp, nl, nz)[:, :ng]
@@ -532,7 +538,8 @@ def _run_bp_group(q, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
 
 def bp_modular_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
                          bv: Optional[int] = None, bab: Optional[int] = None,
-                         config: Optional[tune.KernelConfig] = None):
+                         config: Optional[tune.KernelConfig] = None,
+                         compute_dtype=None):
     """sino: (n_angles, n_rows, n_cols) -> volume (nx, ny, nz), or batched
     sino: (batch, ...) -> (batch, nx, ny, nz).  Exact transpose of
     ``fp_modular_sf_pallas`` (incl. the batched path)."""
@@ -542,15 +549,17 @@ def bp_modular_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
     if sino.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
     batched = sino.ndim == 4
+    out_dtype = sino.dtype
+    cdt = precision.resolve(compute_dtype, sino.dtype)
     qb = sino if batched else sino[None]
-    cfg = tune.resolve_config(geom, qb.shape[0], config, dtype=sino.dtype,
+    cfg = tune.resolve_config(geom, qb.shape[0], config, dtype=cdt,
                               bg=bg, bv=bv, bab=bab)
     px, py, order, sdd_ref = _view_params_modular(geom, fr)
     _, mag_max = _mag_bounds_modular(geom, fr)
     q = jnp.swapaxes(qb, 2, 3)                         # (B, na, nu, nv)
-    q = q[:, order]                                    # group-major views
+    q = precision.cast_in(q[:, order], cdt)            # group-major views
     nax = px.shape[0]
-    acc = jnp.zeros((qb.shape[0],) + geom.vol.shape, q.dtype)
+    acc = jnp.zeros((qb.shape[0],) + geom.vol.shape, jnp.float32)
     if nax:
         acc = acc + _run_bp_group(q[:, :nax], px, geom, True,
                                   cfg.bg, cfg.bv, cfg.bab, sdd_ref, mag_max)
@@ -558,6 +567,7 @@ def bp_modular_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
         accy = _run_bp_group(q[:, nax:], py, geom, False,
                              cfg.bg, cfg.bv, cfg.bab, sdd_ref, mag_max)
         acc = acc + jnp.swapaxes(accy, 1, 2)
+    acc = acc.astype(out_dtype)
     return acc if batched else acc[0]
 
 

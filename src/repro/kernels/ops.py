@@ -33,12 +33,19 @@ exact pair, ``mode="packed"`` forces the packed one, and the default
 accepts the geometry.  Both pairs are matched custom_vjp pairs, so
 gradients stay exactly consistent in every mode.
 
+Precision: every entry point takes ``compute_dtype`` ("bfloat16" |
+"float32" | None = follow the input dtype) implementing the bf16-tile /
+f32-accumulate policy of :mod:`repro.kernels.precision`; the ref backend
+applies the matching quantize-data-only policy so oracles stay
+dtype-matched.
+
 Tile/block sizes come from :class:`repro.kernels.tune.KernelConfig`; pass
 ``config=`` to pin one explicitly (it becomes part of the op-cache key, so a
 fixed config never retraces).  The op cache is a bounded LRU keyed on
-*geometry content* (``CTGeometry.key()``), so equal geometries share ops and
-evicted entries release both the traced functions and the geometry they
-close over.
+*geometry content* (``CTGeometry.key()``) plus model/backend/config/mode and
+the dtype pair (normalized compute policy, input dtype), so equal geometries
+share ops and evicted entries release both the traced functions and the
+geometry they close over.
 """
 from __future__ import annotations
 
@@ -46,9 +53,10 @@ from collections import OrderedDict
 from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.geometry import CTGeometry
-from repro.kernels import ref, tune
+from repro.kernels import precision, ref, tune
 
 
 class _KernelEntry(NamedTuple):
@@ -78,9 +86,11 @@ def register_kernel(geom_type: str, model: str, fp: Callable, bp: Callable,
                     packed_ok: Optional[Callable] = None,
                     supports: Optional[Callable] = None):
     """Register a Pallas kernel pair.  All callables take
-    ``(array, geom, config=KernelConfig|None)``; the batched variants accept
-    a leading batch dimension and fold it into the kernel (lane packing or
-    view-axis folding) instead of requiring an outer vmap.
+    ``(array, geom, config=KernelConfig|None, compute_dtype=None)`` — the
+    precision policy of kernels/precision.py is part of the registration
+    contract; the batched variants accept a leading batch dimension and fold
+    it into the kernel (lane packing or view-axis folding) instead of
+    requiring an outer vmap.
 
     ``fp_packed``/``bp_packed`` register an *approximate* matched pair (the
     lane-packed cone pre-resample) selected by ``mode="packed"`` or by
@@ -181,8 +191,9 @@ def resolve_mode(geom: CTGeometry, model: str = "sf", backend: str = "auto",
 
 def _build(geom: CTGeometry, model: str, backend: str,
            config: Optional[tune.KernelConfig], use_pallas: bool,
-           mode: str) -> Ops:
+           mode: str, compute_dtype) -> Ops:
     fp_b = bp_b = None
+    cdt = compute_dtype
     if use_pallas:
         key = (geom.geom_type, model)
         if key not in _KERNEL_TABLE:
@@ -194,19 +205,25 @@ def _build(geom: CTGeometry, model: str, backend: str,
         if mode == "packed":
             # The packed pair lane-packs batches natively (3D and 4D inputs
             # through the same entry points).
-            raw_fp = lambda f: entry.fp_packed(f, geom, config=config)
-            raw_bp = lambda p: entry.bp_packed(p, geom, config=config)
+            raw_fp = lambda f: entry.fp_packed(f, geom, config=config,
+                                               compute_dtype=cdt)
+            raw_bp = lambda p: entry.bp_packed(p, geom, config=config,
+                                               compute_dtype=cdt)
             fp_b, bp_b = _make_pair(raw_fp, raw_bp)
         else:
-            raw_fp = lambda f: entry.fp(f, geom, config=config)
-            raw_bp = lambda p: entry.bp(p, geom, config=config)
+            raw_fp = lambda f: entry.fp(f, geom, config=config,
+                                        compute_dtype=cdt)
+            raw_bp = lambda p: entry.bp(p, geom, config=config,
+                                        compute_dtype=cdt)
             if entry.fp_batched is not None and entry.bp_batched is not None:
                 fp_b, bp_b = _make_pair(
-                    lambda f: entry.fp_batched(f, geom, config=config),
-                    lambda p: entry.bp_batched(p, geom, config=config))
+                    lambda f: entry.fp_batched(f, geom, config=config,
+                                               compute_dtype=cdt),
+                    lambda p: entry.bp_batched(p, geom, config=config,
+                                               compute_dtype=cdt))
     else:
-        raw_fp = lambda f: ref.forward(f, geom, model)
-        raw_bp = lambda p: ref.adjoint(p, geom, model)
+        raw_fp = lambda f: ref.forward(f, geom, model, dtype=cdt)
+        raw_bp = lambda p: ref.adjoint(p, geom, model, dtype=cdt)
     fp, bp = _make_pair(raw_fp, raw_bp)
     return Ops(fp, bp, fp_b, bp_b, config)
 
@@ -220,20 +237,28 @@ _OPS_CACHE_SIZE = 256
 
 def _get_bundle(geom: CTGeometry, model: str = "sf", backend: str = "auto",
                 config: Optional[tune.KernelConfig] = None,
-                mode: str = "auto") -> Ops:
+                mode: str = "auto", compute_dtype=None,
+                in_dtype=None) -> Ops:
     use_pallas = _use_pallas(geom, model, backend)
     rmode = _resolve_mode(geom, model, mode, use_pallas)
+    cdt = precision.normalize(compute_dtype)
     # The cache is keyed on the *user's* config value: None means "let the
     # kernel resolve per call" (note: re-registering configs after a bundle
     # is cached requires clear_cache() to take effect on the None key).
     # Mode is keyed on the *resolved* value so "auto" and an explicit
     # "packed"/"exact" share one bundle when they dispatch the same pair.
-    key = (geom.key(), model, backend, config, rmode)
+    # Dtype is part of the content key: the normalized compute policy plus
+    # the input dtype the bundle was first applied to — a cdt=None bundle
+    # follows its input's dtype, so f32 and bf16 callers must not share
+    # traced closures (and even fixed-cdt bundles key the input dtype so
+    # the output dtype stays caller-consistent).
+    idt = None if in_dtype is None else jnp.dtype(in_dtype).name
+    key = (geom.key(), model, backend, config, rmode, cdt, idt)
     hit = _OPS_CACHE.get(key)
     if hit is not None:
         _OPS_CACHE.move_to_end(key)
         return hit
-    bundle = _build(geom, model, backend, config, use_pallas, rmode)
+    bundle = _build(geom, model, backend, config, use_pallas, rmode, cdt)
     _OPS_CACHE[key] = bundle
     while len(_OPS_CACHE) > _OPS_CACHE_SIZE:
         _OPS_CACHE.popitem(last=False)
@@ -247,7 +272,7 @@ def clear_cache() -> None:
 
 def get_ops(geom: CTGeometry, model: str = "sf", backend: str = "auto",
             config: Optional[tune.KernelConfig] = None,
-            mode: str = "auto") -> Tuple[Callable, Callable]:
+            mode: str = "auto", compute_dtype=None) -> Tuple[Callable, Callable]:
     """Return the (forward, back) matched differentiable pair for a geometry.
 
     ``mode`` selects between the exact kernels and an approximate *packed*
@@ -257,10 +282,14 @@ def get_ops(geom: CTGeometry, model: str = "sf", backend: str = "auto",
     (``tune.packed_cone_ok``).  The packed pair is matched (exact transpose
     of itself), so gradients stay consistent in every mode.
 
-    Repeated calls with an equal geometry/model/backend/config/mode return
-    the *same* function objects, so jit caches built around them never
-    retrace."""
-    bundle = _get_bundle(geom, model, backend, config, mode)
+    ``compute_dtype`` sets the kernels' tile precision ("bfloat16" |
+    "float32"; None follows the input dtype) — accumulation is always f32
+    and outputs keep the caller's dtype (see kernels/precision.py).
+
+    Repeated calls with an equal geometry/model/backend/config/mode/dtype
+    return the *same* function objects, so jit caches built around them
+    never retrace."""
+    bundle = _get_bundle(geom, model, backend, config, mode, compute_dtype)
     return bundle.fp, bundle.bp
 
 
@@ -294,16 +323,18 @@ def _apply(op: Callable, op_batched: Optional[Callable], x, ndim_in: int):
 def forward_project(f, geom: CTGeometry, model: str = "sf",
                     backend: str = "auto",
                     config: Optional[tune.KernelConfig] = None,
-                    mode: str = "auto"):
+                    mode: str = "auto", compute_dtype=None):
     """A @ f.  ``f``: (..., nx, ny, nz) -> (..., n_angles, n_rows, n_cols)."""
-    b = _get_bundle(geom, model, backend, config, mode)
+    b = _get_bundle(geom, model, backend, config, mode, compute_dtype,
+                    in_dtype=f.dtype)
     return _apply(b.fp, b.fp_batched, f, 3)
 
 
 def back_project(p, geom: CTGeometry, model: str = "sf",
                  backend: str = "auto",
                  config: Optional[tune.KernelConfig] = None,
-                 mode: str = "auto"):
+                 mode: str = "auto", compute_dtype=None):
     """A^T @ p.  ``p``: (..., n_angles, n_rows, n_cols) -> (..., nx, ny, nz)."""
-    b = _get_bundle(geom, model, backend, config, mode)
+    b = _get_bundle(geom, model, backend, config, mode, compute_dtype,
+                    in_dtype=p.dtype)
     return _apply(b.bp, b.bp_batched, p, 3)

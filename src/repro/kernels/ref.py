@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.geometry import CTGeometry
+from repro.kernels import precision
 from repro.kernels.footprint import (cone_transaxial_footprint,
                                      fan_transaxial_footprint,
                                      parallel_footprint, rect_overlap,
@@ -400,7 +401,25 @@ def register_reference(geom_type: str, model: str, fn) -> None:
     _FP_TABLE[(geom_type, model)] = fn
 
 
-def forward(f, geom: CTGeometry, model: str = "sf"):
+def _quantize_in(x, dtype):
+    """Dtype-matched-oracle input handling: quantize the *data* to the
+    compute dtype (matching the kernels' tile cast) but run the oracle math
+    in f32 — the oracle's coordinate/weight arithmetic follows the input
+    dtype, and detector-edge coordinates at bf16's 8-bit mantissa would
+    corrupt the footprint geometry the kernels always derive in f32.
+    Returns (f32 quantized data, original dtype) or (x, None) when the
+    plain f32 path applies unchanged."""
+    cdt = precision.resolve(dtype, x.dtype)
+    if cdt == jnp.float32 and x.dtype == jnp.float32:
+        return x, None
+    return x.astype(cdt).astype(jnp.float32), x.dtype
+
+
+def forward(f, geom: CTGeometry, model: str = "sf", dtype=None):
+    """Reference forward projection.  ``dtype`` mirrors the kernels'
+    ``compute_dtype`` policy so oracles stay dtype-matched: the volume is
+    quantized to the compute dtype, the math runs in f32, and the result
+    comes back in the input's dtype."""
     key = (geom.geom_type, model)
     if key not in _FP_TABLE:
         if geom.geom_type == "modular":
@@ -410,14 +429,19 @@ def forward(f, geom: CTGeometry, model: str = "sf"):
             key = ("modular", "joseph")
         else:
             raise NotImplementedError(f"no reference projector for {key}")
-    return _FP_TABLE[key](f, geom)
+    fq, out_dtype = _quantize_in(f, dtype)
+    out = _FP_TABLE[key](fq, geom)
+    return out if out_dtype is None else out.astype(out_dtype)
 
 
-def adjoint(sino, geom: CTGeometry, model: str = "sf"):
+def adjoint(sino, geom: CTGeometry, model: str = "sf", dtype=None):
     """Exact-transpose backprojection: A^T applied to ``sino``.
 
     ``forward`` is linear in the volume, so its VJP *is* the exact adjoint —
-    the matched-pair property holds by construction."""
-    f0 = jnp.zeros(geom.vol.shape, sino.dtype)
+    the matched-pair property holds by construction.  ``dtype`` applies the
+    same quantize-data-only policy as :func:`forward`."""
+    q, out_dtype = _quantize_in(sino, dtype)
+    f0 = jnp.zeros(geom.vol.shape, q.dtype)
     _, vjp = jax.vjp(lambda x: forward(x, geom, model), f0)
-    return vjp(sino)[0]
+    out = vjp(q)[0]
+    return out if out_dtype is None else out.astype(out_dtype)

@@ -1,6 +1,6 @@
 """Kernel tile/block configuration: registry + heuristics + autotuner.
 
-The Pallas projector kernels are parameterized by five tile sizes:
+The Pallas projector kernels are parameterized by six tile sizes:
 
     bu   FP: detector-column tile (sublane axis of the output tile)
     bv   lane tile — the 128-wide axis.  With lane packing this axis holds
@@ -11,6 +11,12 @@ The Pallas projector kernels are parameterized by five tile sizes:
     bg   BP: gathered-axis (voxel) tile.
     bab  BP: views per program — one wide sinogram-stripe DMA and a single
          output-tile accumulation per ``bab`` views.
+    bs   BP: stripe reuse — gathered-axis sub-tiles served per sinogram
+         stripe residency.  Each program covers ``bs * bg`` voxels, so one
+         ``bab``-view stripe (double-buffered by the Pallas pipeline) is
+         reused ``bs`` times before eviction instead of being re-fetched
+         per gathered tile; the per-sub-tile detector window stays sized
+         by ``bg``, so weight tiles do not widen.
 
 Historically these were module constants (``BU``/``BV``); now every call
 site resolves a :class:`KernelConfig` through :func:`get_config`:
@@ -81,9 +87,10 @@ class KernelConfig:
     ba: int = 1      # FP views per program
     bg: int = 16     # BP gathered-axis tile
     bab: int = 1     # BP views per program
+    bs: int = 1      # BP gathered sub-tiles per stripe residency (reuse)
 
     def __post_init__(self):
-        for name in ("bu", "bv", "ba", "bg", "bab"):
+        for name in ("bu", "bv", "ba", "bg", "bab", "bs"):
             v = getattr(self, name)
             if not (isinstance(v, int) and v > 0):
                 raise ValueError(f"KernelConfig.{name} must be a positive "
@@ -272,17 +279,25 @@ def heuristic_config(geom: CTGeometry, batch: int = 1,
         # VMEM window stays comparable to the parallel kernel's.
         bu = max(8, bu // 2)
     bg = bu
+    # Stripe reuse only exists in the lane-packed BP kernels (parallel,
+    # fan, packed cone); the view-folded cone/modular BPs ignore it.
+    lane_packed_bp = geom.geom_type in ("parallel", "fan") or packed
     if _on_tpu():
         # View blocking amortizes the dominant HBM stream (volume line for
         # FP, sinogram stripe for BP); diminishing returns past ~8.
         ba = min(8 if na >= 8 else max(1, na), na)
         bab = min(4, na)
+        # One stripe serving two gathered sub-tiles halves BP stripe
+        # traffic for ~2x the output-tile VMEM — a safe default; autotune
+        # sweeps 1/2/4.
+        bs = 2 if lane_packed_bp else 1
     else:
         # Interpret mode executes the per-view python loop serially — keep
         # programs minimal so correctness tests stay fast.
         ba = 1
         bab = 1
-    return KernelConfig(bu=bu, bv=bv, ba=ba, bg=bg, bab=bab)
+        bs = 1
+    return KernelConfig(bu=bu, bv=bv, ba=ba, bg=bg, bab=bab, bs=bs)
 
 
 def get_config(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
@@ -372,9 +387,10 @@ def default_candidates(geom: CTGeometry) -> Iterable[KernelConfig]:
     bas = sorted({min(b, na) for b in (1, 2, 4, 8)})
     bgs = [8, 16, 32]
     babs = sorted({min(b, na) for b in (1, 2, 4)})
+    bss = (1, 2, 4)                       # BP stripe-reuse blocking factors
     for bu, ba in itertools.product(bus, bas):
-        for bg, bab in itertools.product(bgs, babs):
-            yield KernelConfig(bu=bu, bv=LANE, ba=ba, bg=bg, bab=bab)
+        for bg, bab, bs in itertools.product(bgs, babs, bss):
+            yield KernelConfig(bu=bu, bv=LANE, ba=ba, bg=bg, bab=bab, bs=bs)
 
 
 def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
@@ -428,7 +444,7 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
         _AUTOTUNED[key] = cfg
         return cfg
     fp_grid = sorted({(c.bu, c.ba) for c in cand})
-    bp_grid = sorted({(c.bg, c.bab) for c in cand})
+    bp_grid = sorted({(c.bg, c.bab, c.bs) for c in cand})
 
     shape = ((batch,) if batch > 1 else ()) + geom.vol.shape
     f = jnp.ones(shape, dtype)
@@ -447,14 +463,14 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
             best_fp, t_fp = (bu, ba), t
 
     best_bp, t_bp = None, float("inf")
-    for bg, bab in bp_grid:
-        cfg = KernelConfig(bg=bg, bab=bab)
+    for bg, bab, bs in bp_grid:
+        cfg = KernelConfig(bg=bg, bab=bab, bs=bs)
         try:
             t = _time_call(lambda p: bp_fn(p, geom, config=cfg), y, reps=reps)
         except Exception:                             # noqa: BLE001
             continue
         if t < t_bp:
-            best_bp, t_bp = (bg, bab), t
+            best_bp, t_bp = (bg, bab, bs), t
 
     # Never cache an unmeasured candidate: if a sweep produced no successful
     # run, fall back to the heuristic for that kernel.
@@ -462,7 +478,8 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
         bu=best_fp[0] if best_fp else heur.bu,
         ba=best_fp[1] if best_fp else heur.ba,
         bg=best_bp[0] if best_bp else heur.bg,
-        bab=best_bp[1] if best_bp else heur.bab)
+        bab=best_bp[1] if best_bp else heur.bab,
+        bs=best_bp[2] if best_bp else heur.bs)
     _AUTOTUNED[key] = cfg
     save_tuned(key, cfg)
     return cfg
@@ -474,7 +491,8 @@ def _autotune_viewfold(geom: CTGeometry, batch: int, dtype, cand, reps: int,
     column tile (bu) + BP gathered tile / view block (bg, bab), mirroring
     the fan/parallel sweep.  The row tile bv stays on the heuristic (it
     tiles physical detector rows, whose count the shape class already
-    encodes); there is no FP ``ba`` knob — views fold into the grid."""
+    encodes); there is no FP ``ba`` knob — views fold into the grid — and
+    ``bs`` is not swept (the view-folded BPs ignore stripe blocking)."""
     base = heuristic_config(geom, batch, dtype)
     shape = ((batch,) if batch > 1 else ()) + geom.vol.shape
     f = jnp.ones(shape, dtype)

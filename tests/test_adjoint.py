@@ -234,3 +234,71 @@ def test_double_differentiation():
     grad_y = jax.grad(lambda y: jnp.vdot(proj.T(y), x))(y)
     np.testing.assert_allclose(np.asarray(grad_y), np.asarray(proj(x)),
                                rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# bf16 tile precision (kernels/precision.py)
+# --------------------------------------------------------------------------- #
+# At compute_dtype="bfloat16" the FP quantizes the volume-side stream while
+# the BP quantizes the sinogram-side stream, so <A x, y> and <x, A^T y> are
+# inner products of *differently quantized* operators: they agree to
+# O(BF16_EPS) relative (f32 accumulation keeps the error from compounding),
+# which is the documented BF16_DOT_TOL.  An unmatched pair still fails this
+# at the 1e-1 level, so the dot-test stays discriminating at bf16.
+from repro.kernels import precision  # noqa: E402
+
+BF16_GEOMS = {
+    "parallel": lambda: parallel_beam(10, 6, 36, VolumeGeometry(24, 24, 6)),
+    "fan": lambda: fan_beam(8, 4, 36, VolumeGeometry(24, 24, 4), sod=120.0,
+                            sdd=240.0, pixel_width=2.0),
+    "cone": lambda: cone_beam(8, 12, 36, VolumeGeometry(24, 24, 8),
+                              sod=120.0, sdd=240.0, pixel_width=2.0,
+                              pixel_height=2.0),
+    "modular": lambda: helical_beam(1.0, 8.0, 6, 8, 24,
+                                    VolumeGeometry(16, 16, 8), sod=80.0,
+                                    sdd=160.0, pixel_width=2.0,
+                                    pixel_height=2.0),
+}
+
+
+@pytest.mark.parametrize("name", sorted(BF16_GEOMS))
+def test_bf16_pallas_pair_dot(name):
+    g = BF16_GEOMS[name]()
+    proj = Projector(g, "sf", backend="pallas", mode="exact",
+                     compute_dtype="bfloat16")
+    _dot_test(proj, tol=float(precision.BF16_DOT_TOL))
+
+
+def test_bf16_packed_cone_pair_dot():
+    g = BF16_GEOMS["cone"]()
+    proj = Projector(g, "sf", backend="pallas", mode="packed",
+                     compute_dtype="bfloat16")
+    _dot_test(proj, tol=float(precision.BF16_DOT_TOL))
+
+
+def test_bf16_gradient_is_backprojection():
+    """At bf16 the custom_vjp wiring still routes the gradient through the
+    *same* bf16 BP op, so grad == A^T(Ax - y) holds tightly (same closure,
+    not merely the same math)."""
+    g = BF16_GEOMS["parallel"]()
+    proj = Projector(g, "sf", backend="pallas", compute_dtype="bfloat16")
+    x = jax.random.normal(jax.random.PRNGKey(0), proj.vol_shape())
+    y = jax.random.normal(jax.random.PRNGKey(1), proj.sino_shape())
+    grad = jax.grad(lambda x: 0.5 * jnp.sum((proj(x) - y) ** 2))(x)
+    expected = proj.T(proj(x) - y)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(expected),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_bf16_stripe_reuse_pair_dot():
+    """The BP stripe-reuse blocking (bs > 1) preserves the matched pair."""
+    from repro.kernels import fp_par
+    g = BF16_GEOMS["parallel"]()
+    kx, ky = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(kx, g.vol.shape)
+    y = jax.random.normal(ky, g.sino_shape)
+    lhs = jnp.vdot(fp_par.fp_parallel_sf_pallas(x, g,
+                                                compute_dtype="bfloat16"), y)
+    rhs = jnp.vdot(x, fp_par.bp_parallel_sf_pallas(y, g, bs=4,
+                                                   compute_dtype="bfloat16"))
+    assert abs(lhs - rhs) / max(abs(lhs), 1e-6) < precision.BF16_DOT_TOL

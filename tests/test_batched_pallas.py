@@ -332,3 +332,93 @@ def test_cone_batched_pair_is_matched():
     lhs = jnp.vdot(proj(x), y)
     rhs = jnp.vdot(x, proj.T(y))
     assert abs(lhs - rhs) / max(abs(lhs), 1e-6) < 1e-4, (lhs, rhs)
+
+
+# --------------------------------------------------------------------------- #
+# Mixed precision + BP stripe reuse (always-on anchors; the property sweep
+# lives in the hypothesis-gated test_kernels.py)
+# --------------------------------------------------------------------------- #
+from repro.kernels import precision  # noqa: E402
+
+
+@pytest.mark.parametrize("bs", [2, 4])
+def test_bp_stripe_reuse_is_exact(bs):
+    """bs > 1 only re-blocks the gathered axis: results are identical (to
+    f32 roundoff) to the unblocked BP, both parallel and fan."""
+    gp = parallel_beam(7, 4, 24, VolumeGeometry(16, 16, 4))
+    gf = fan_beam(6, 4, 24, VolumeGeometry(16, 16, 4), sod=70.0, sdd=140.0,
+                  pixel_width=2.0)
+    yp = jax.random.normal(jax.random.PRNGKey(1), gp.sino_shape)
+    yf = jax.random.normal(jax.random.PRNGKey(2), gf.sino_shape)
+    _assert_close(bp_parallel_sf_pallas(yp, gp, bg=8, bs=bs),
+                  ref.adjoint(yp, gp, "sf"))
+    _assert_close(bp_fan_sf_pallas(yf, gf, bg=8, bs=bs),
+                  ref.adjoint(yf, gf, "sf"))
+
+
+def test_bp_stripe_reuse_clamps_small_volumes():
+    """bs larger than the gathered axis allows is clamped, not an error."""
+    g = parallel_beam(6, 2, 24, VolumeGeometry(16, 16, 2))
+    y = jax.random.normal(jax.random.PRNGKey(1), g.sino_shape)
+    _assert_close(bp_parallel_sf_pallas(y, g, bg=16, bs=8),
+                  ref.adjoint(y, g, "sf"))
+
+
+_BF16_KERNELS = [
+    ("parallel", lambda: parallel_beam(6, 4, 24, VolumeGeometry(16, 16, 4))),
+    ("fan", lambda: fan_beam(6, 4, 24, VolumeGeometry(16, 16, 4), sod=70.0,
+                             sdd=140.0, pixel_width=2.0)),
+    ("cone", lambda: cone_beam(6, 8, 24, VolumeGeometry(16, 16, 8), sod=80.0,
+                               sdd=160.0, pixel_width=2.0, pixel_height=2.0)),
+]
+
+
+@pytest.mark.parametrize("name,mk", _BF16_KERNELS, ids=[n for n, _ in _BF16_KERNELS])
+def test_bf16_fp_bp_error_within_documented_bound(name, mk):
+    """compute_dtype="bfloat16" stays within BF16_FP_REL_BOUND of the f32
+    oracle for every registered pair, and actually perturbs the numerics
+    (i.e. the policy reached the kernel, not a silent f32 fallback)."""
+    g = mk()
+    f = jax.random.normal(jax.random.PRNGKey(0), g.vol.shape)
+    y = jax.random.normal(jax.random.PRNGKey(1), g.sino_shape)
+    s_ref = ref.forward(f, g, "sf")
+    b_ref = ref.adjoint(y, g, "sf")
+    s = ops.forward_project(f, g, "sf", backend="pallas", mode="exact",
+                            compute_dtype="bfloat16")
+    b = ops.back_project(y, g, "sf", backend="pallas", mode="exact",
+                         compute_dtype="bfloat16")
+    assert s.dtype == jnp.float32 and b.dtype == jnp.float32
+    rel_s = float(jnp.abs(s - s_ref).max() / jnp.abs(s_ref).max())
+    rel_b = float(jnp.abs(b - b_ref).max() / jnp.abs(b_ref).max())
+    assert 1e-5 < rel_s < precision.BF16_FP_REL_BOUND, rel_s
+    assert 1e-5 < rel_b < precision.BF16_FP_REL_BOUND, rel_b
+
+
+def test_bf16_matches_quantized_oracle():
+    """The dtype-matched oracle (ref.forward(dtype="bfloat16")) quantizes
+    the data stream the way the kernel tiles do, so kernel-vs-oracle
+    distance shrinks well below the full bf16 bound."""
+    g = parallel_beam(6, 4, 24, VolumeGeometry(16, 16, 4))
+    f = jax.random.normal(jax.random.PRNGKey(0), g.vol.shape)
+    s_k = fp_parallel_sf_pallas(f, g, compute_dtype="bfloat16")
+    s_q = ref.forward(f, g, "sf", dtype="bfloat16")
+    assert s_q.dtype == jnp.float32
+    rel = float(jnp.abs(s_k - s_q).max() / jnp.abs(s_q).max())
+    assert rel < precision.BF16_DOT_TOL, rel
+
+
+def test_bf16_batched_lane_packed_paths():
+    """The lane-packed batched FP/BP honor the policy too (bf16 tiles, f32
+    out) — the rows the perf gate targets."""
+    g = parallel_beam(8, 1, 30, VolumeGeometry(20, 20, 1))
+    fb = jax.random.normal(jax.random.PRNGKey(0), (4,) + g.vol.shape)
+    yb = jax.random.normal(jax.random.PRNGKey(1), (4,) + g.sino_shape)
+    s = fp_parallel_sf_pallas(fb, g, compute_dtype="bfloat16")
+    b = bp_parallel_sf_pallas(yb, g, compute_dtype="bfloat16", bs=2)
+    assert s.dtype == jnp.float32 and b.dtype == jnp.float32
+    s_ref = jax.vmap(lambda x: ref.forward(x, g, "sf"))(fb)
+    b_ref = jax.vmap(lambda q: ref.adjoint(q, g, "sf"))(yb)
+    assert float(jnp.abs(s - s_ref).max()
+                 / jnp.abs(s_ref).max()) < precision.BF16_FP_REL_BOUND
+    assert float(jnp.abs(b - b_ref).max()
+                 / jnp.abs(b_ref).max()) < precision.BF16_FP_REL_BOUND

@@ -167,3 +167,43 @@ def test_cone_pallas_pair_matched():
     lhs = jnp.vdot(proj(x), y)
     rhs = jnp.vdot(x, proj.T(y))
     assert abs(lhs - rhs) / abs(lhs) < 1e-4
+
+
+# --------------------------------------------------------------------------- #
+# Mixed precision (bf16-tile / f32-accumulate) property sweep
+# --------------------------------------------------------------------------- #
+@settings(max_examples=8, deadline=None)
+@given(na=st.integers(3, 10), nu=st.integers(20, 40),
+       du=st.floats(0.7, 1.6), seed=st.integers(0, 1000))
+def test_bf16_fp_error_bound_property(na, nu, du, seed):
+    """Across randomized parallel geometries, the bf16-tile FP stays within
+    the documented BF16_FP_REL_BOUND of the f32 oracle while measurably
+    differing from the f32 kernel run (the cast actually happened)."""
+    from repro.kernels import precision
+    rng = np.random.default_rng(seed)
+    vol = VolumeGeometry(16, 16, 4)
+    ang = np.sort(rng.uniform(0, np.pi, na))
+    g = parallel_beam(na, 4, nu, vol, angles=ang, pixel_width=du)
+    f = jnp.asarray(rng.normal(size=vol.shape).astype(np.float32))
+    s_ref = ref.forward(f, g, "sf")
+    s_b = fp_parallel_sf_pallas(f, g, compute_dtype="bfloat16")
+    assert s_b.dtype == jnp.float32
+    denom = float(jnp.abs(s_ref).max())
+    rel = float(jnp.abs(s_b - s_ref).max()) / max(denom, 1e-9)
+    assert rel < precision.BF16_FP_REL_BOUND, rel
+
+
+@settings(max_examples=6, deadline=None)
+@given(bs=st.integers(1, 4), bg=st.sampled_from([8, 16]),
+       seed=st.integers(0, 1000))
+def test_bp_stripe_reuse_exact_property(bs, bg, seed):
+    """BP stripe blocking (bs) is a pure re-blocking: any (bg, bs) combo
+    reproduces the oracle adjoint to f32 tolerance."""
+    rng = np.random.default_rng(seed)
+    vol = VolumeGeometry(16, 16, 4)
+    g = parallel_beam(6, 4, 24, vol)
+    y = jnp.asarray(rng.normal(size=g.sino_shape).astype(np.float32))
+    b_ref = ref.adjoint(y, g, "sf")
+    b_pal = bp_parallel_sf_pallas(y, g, bg=bg, bs=bs)
+    np.testing.assert_allclose(np.asarray(b_pal), np.asarray(b_ref),
+                               rtol=2e-4, atol=2e-4)

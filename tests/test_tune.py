@@ -25,8 +25,19 @@ def test_config_validation():
         KernelConfig(bu=0)
     with pytest.raises(ValueError):
         KernelConfig(bv=100)          # not a sublane multiple
+    with pytest.raises(ValueError):
+        KernelConfig(bs=0)            # stripe-reuse factor must be >= 1
     c = KernelConfig(bu=8, ba=2)
     assert c.replace(ba=4).ba == 4 and c.ba == 2
+    assert c.bs == 1                  # stripe reuse off by default
+    assert c.replace(bs=4).bs == 4
+
+
+def test_candidates_sweep_stripe_reuse():
+    """The autotune candidate grid includes bs > 1 BP stripe-blocking
+    entries."""
+    cand = list(tune.default_candidates(_geom()))
+    assert {c.bs for c in cand} >= {1, 2, 4}
 
 
 def test_heuristic_defaults_off_tpu():
@@ -78,7 +89,7 @@ def test_tune_cache_roundtrip(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_TUNE_CACHE_PATH", str(path))
     g = _geom()
     key = tune.shape_class(g)
-    cfg = KernelConfig(bu=32, ba=2, bg=32, bab=2)
+    cfg = KernelConfig(bu=32, ba=2, bg=32, bab=2, bs=2)
     tune.save_tuned(key, cfg)
     assert path.exists()
     assert tune.load_tuned(key) == cfg
@@ -113,6 +124,18 @@ def test_tune_cache_corrupt_or_stale_file_ignored(tmp_path, monkeypatch):
     assert tune.load_tuned(key) is None
     tune.save_tuned(key, KernelConfig(bu=16))
     assert tune.load_tuned(key) == KernelConfig(bu=16)
+
+
+def test_tune_cache_pre_stripe_entry_still_loads(tmp_path, monkeypatch):
+    """Entries written before the bs knob existed (no "bs" field) load with
+    the field default instead of being discarded as stale."""
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE_PATH", str(path))
+    key = tune.shape_class(_geom())
+    path.write_text('{"%s": {"bu": 16, "bv": 128, "ba": 2, "bg": 16, '
+                    '"bab": 2}}' % tune._disk_key(key))
+    cfg = tune.load_tuned(key)
+    assert cfg == KernelConfig(bu=16, bv=128, ba=2, bg=16, bab=2, bs=1)
 
 
 # --------------------------------------------------------------------------- #
@@ -190,6 +213,44 @@ def test_batched_dispatch_resolves_with_real_batch(monkeypatch):
     out = ops.forward_project(f, g, "sf", backend="pallas")
     assert out.shape == (8,) + g.sino_shape
     assert 8 in calls
+
+
+def test_ops_cache_dtype_keyed():
+    """The op cache keys the dtype pair: compute_dtype variants and input
+    dtypes get distinct bundles (a cdt=None bundle follows its input's
+    dtype, so f32 and bf16 callers must never share traced closures)."""
+    g = _geom()
+    fp32, _ = ops.get_ops(g, "sf", "ref")
+    fpb, _ = ops.get_ops(g, "sf", "ref", compute_dtype="bfloat16")
+    assert fp32 is not fpb
+    # alias normalizes into the same key
+    fpb2, _ = ops.get_ops(g, "sf", "ref", compute_dtype="bf16")
+    assert fpb is fpb2
+    # input dtype is part of the content key even on the default-f32 path
+    ops.clear_cache()
+    f32 = jax.random.normal(jax.random.PRNGKey(0), g.vol.shape)
+    out32 = ops.forward_project(f32, g, "sf", backend="pallas")
+    n1 = len(ops._OPS_CACHE)
+    out16 = ops.forward_project(f32.astype(jnp.bfloat16), g, "sf",
+                                backend="pallas")
+    assert len(ops._OPS_CACHE) == n1 + 1
+    assert out32.dtype == jnp.float32 and out16.dtype == jnp.bfloat16
+
+
+def test_projector_compute_dtype_roundtrip():
+    """Projector(compute_dtype=...) reaches the kernels: bf16 tiles change
+    the numerics measurably (vs the f32 run) while the output keeps the
+    caller's f32 dtype; bad values raise at construction."""
+    g = _geom()
+    x = jax.random.normal(jax.random.PRNGKey(0), g.vol.shape)
+    from repro.kernels import precision
+    s32 = Projector(g, "sf", backend="pallas")(x)
+    sb = Projector(g, "sf", backend="pallas", compute_dtype="bf16")(x)
+    assert sb.dtype == jnp.float32
+    rel = float(jnp.abs(sb - s32).max() / jnp.abs(s32).max())
+    assert 0.0 < rel < precision.BF16_FP_REL_BOUND
+    with pytest.raises(ValueError):
+        Projector(g, compute_dtype="float64")
 
 
 def test_projector_accepts_config():
