@@ -7,7 +7,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import Projector, VolumeGeometry, parallel_beam
+from repro.core import Projector, ProjectorSpec, VolumeGeometry, parallel_beam
 from repro.data.metrics import psnr
 from repro.data.phantoms import shepp_logan_2d
 from repro.recon import cgls, fista_tv, sirt
@@ -16,15 +16,15 @@ from repro.recon import cgls, fista_tv, sirt
 def run(csv_rows: list):
     vol = VolumeGeometry(128, 128, 1)
     geom = parallel_beam(180, 1, 192, vol)
-    proj = Projector(geom, "sf")
+    proj = Projector(ProjectorSpec(geom, model="sf"))
     f = jnp.asarray(shepp_logan_2d(vol)[:, :, None]) * 0.02
     y = proj(f)
 
     algs = {
         "fbp": lambda: proj.fbp(y),
-        "sirt50": lambda: sirt(proj, y, n_iters=50),
-        "cgls20": lambda: cgls(proj, y, n_iters=20)[0],
-        "fista30": lambda: fista_tv(proj, y, n_iters=30, beta=1e-4),
+        "sirt50": lambda: sirt(proj, y, n_iters=50).image,
+        "cgls20": lambda: cgls(proj, y, n_iters=20).image,
+        "fista30": lambda: fista_tv(proj, y, n_iters=30, beta=1e-4).image,
     }
     for name, fn in algs.items():
         jfn = jax.jit(fn)

@@ -1,0 +1,89 @@
+"""Serving throughput bench: geometry-bucketed dynamic batching vs a serial
+per-request loop (``CTServer(max_batch=1)``), per latency tier.
+
+The scenario is the ROADMAP's recon-as-a-service shape: a burst of small
+single-slice recon requests sharing one protocol geometry.  The batched
+server packs them onto the lane axis in one compiled dispatch; the serial
+server answers them one by one through the same solver and warm path — the
+measured ratio is purely the packing win.
+
+Rows (us per recon, lower is better):
+    serve/<tier>/serial_us_per_recon     calibration row for the tier
+    serve/<tier>/batched_us_per_recon    gated: serial/batched >= 4x
+    serve/<tier>/batched_p50_us          per-request latency percentiles
+    serve/<tier>/batched_p99_us          (submit -> answered, queue incl.)
+
+On CPU the quality tier shows the full packing win (an iterative solve is
+many small dispatches per request, all amortized by the pack); single-shot
+FBP is bounded by its own XLA compute, which batching cannot shrink off-TPU,
+so the interactive gate is advisory on CPU (see check_regression.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Projector, ProjectorSpec, VolumeGeometry, parallel_beam
+from repro.data.phantoms import shepp_logan_2d
+from repro.launch.ct_serve import CTServer, ReconRequest
+
+N_REQUESTS = 64
+MAX_BATCH = 16
+#: (tier, solver, kwargs, (nx, n_angles, n_cols)) — per-request shapes are
+#: deliberately small (single-slice protocol scans): that is the regime the
+#: batcher exists for.
+SCENARIOS = (
+    ("interactive", "fbp", {}, (16, 12, 24)),
+    ("quality", "sirt", {"n_iters": 10}, (32, 24, 48)),
+)
+
+
+def _drive(server: CTServer, spec, sino, solver, kwargs):
+    """Submit a burst of identical-protocol requests, drain, and return
+    (wall seconds, sorted per-request latencies in us)."""
+    t0 = time.perf_counter()
+    rids = [server.submit(ReconRequest(spec=spec, sino=sino, solver=solver,
+                                       solver_kwargs=dict(kwargs)))
+            for _ in range(N_REQUESTS)]
+    done = server.drain()
+    wall = time.perf_counter() - t0
+    assert all(done[r].ok for r in rids), \
+        [done[r].error for r in rids if not done[r].ok][:1]
+    lats = np.sort([done[r].latency_s * 1e6 for r in rids])
+    return wall, lats
+
+
+def run(csv_rows: list):
+    backend = jax.default_backend()
+    for tier, solver, kwargs, (nx, n_angles, n_cols) in SCENARIOS:
+        vol = VolumeGeometry(nx, nx, 1)
+        spec = ProjectorSpec(parallel_beam(n_angles, 1, n_cols, vol))
+        f = jnp.asarray(shepp_logan_2d(vol)[:, :, None]) * 0.02
+        sino = Projector(spec)(f)
+
+        serial = CTServer(max_batch=1)
+        batched = CTServer(max_batch=MAX_BATCH)
+        for srv in (serial, batched):
+            srv.warm(spec, solver, kwargs)
+            _drive(srv, spec, sino, solver, kwargs)   # shake out host caches
+
+        wall_serial, _ = _drive(serial, spec, sino, solver, kwargs)
+        wall_batched, lats = _drive(batched, spec, sino, solver, kwargs)
+
+        us_serial = wall_serial / N_REQUESTS * 1e6
+        us_batched = wall_batched / N_REQUESTS * 1e6
+        speedup = us_serial / max(us_batched, 1e-9)
+        p50 = float(np.percentile(lats, 50))
+        p99 = float(np.percentile(lats, 99))
+        csv_rows.append((f"serve/{tier}/serial_us_per_recon", us_serial,
+                         f"{backend} batch=1 n={N_REQUESTS}"))
+        csv_rows.append((f"serve/{tier}/batched_us_per_recon", us_batched,
+                         f"{backend} batch={MAX_BATCH} "
+                         f"speedup={speedup:.1f}x"))
+        csv_rows.append((f"serve/{tier}/batched_p50_us", p50,
+                         f"{backend} latency"))
+        csv_rows.append((f"serve/{tier}/batched_p99_us", p99,
+                         f"{backend} latency"))

@@ -24,11 +24,22 @@ above the jitter floor.  Interpret-mode runs (CI CPU) print the comparison
 as advisory warnings: interpreter per-element cost swamps the HBM-bandwidth
 effect bf16 tiles exist to exploit, so a CPU "slower" verdict is noise.
 
+A third pass gates the serving rows (``serve/<tier>/...`` from
+``bench_serve``): every tier's batched us/recon must beat the same tier's
+serial per-request loop by ``SERVE_MIN_SPEEDUP`` — enforced everywhere for
+the iterative ``quality`` tier, TPU-only (advisory on CPU) for the
+single-shot ``interactive`` tier.  Serve rows normalize by their own tier's
+serial row, so the baseline comparison stays machine-portable for them too.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.run --only kernels > fresh.csv
     python -m benchmarks.check_regression fresh.csv              # gate
     python -m benchmarks.check_regression r1.csv r2.csv r3.csv r4.csv \
         --write-baseline     # per-row median across repeated runs
+
+Baseline rows are only compared for suites present in the fresh CSV, so a
+kernels-only CSV and a serve-only CSV both gate cleanly; CI concatenates
+both suites into one CSV before gating.
 """
 from __future__ import annotations
 
@@ -62,6 +73,18 @@ JITTER_FLOOR_US = 5000.0
 BF16_SUFFIX = "_bf16"
 BATCHED_BP = re.compile(r"^kernel/bp[^/]*_b\d+/")
 DTYPE_TARGET = 1.5
+# Serving throughput gate: serve/<tier>/batched_us_per_recon must beat the
+# same tier's serial row by SERVE_MIN_SPEEDUP.  The quality tier (iterative
+# solvers — many small dispatches per request, all amortized by the pack) is
+# enforced on every backend; the interactive tier (single-shot FBP, whose
+# XLA compute batching cannot shrink off-TPU) is enforced on TPU and
+# advisory on CPU, mirroring the bf16 sibling gate's reasoning.  Serve rows
+# normalize by their tier's serial row (same run, same stack), so the
+# norm-vs-baseline pass stays machine-portable for them too.
+SERVE_GATE = re.compile(r"^serve/")
+SERVE_ROW = re.compile(r"^serve/(?P<tier>[^/]+)/(?P<kind>[^/]+)$")
+SERVE_MIN_SPEEDUP = 4.0
+SERVE_CPU_GATED_TIERS = ("quality",)
 
 
 def parse_csv(path: str) -> Dict[str, Tuple[float, str]]:
@@ -84,8 +107,41 @@ def parse_csv(path: str) -> Dict[str, Tuple[float, str]]:
 
 def _norm(fresh: Dict[str, Tuple[float, str]], name: str) -> float:
     us, derived = fresh[name]
-    cal = CAL_JIT if derived.startswith("cpu-jit") else CAL_PALLAS
+    m = SERVE_ROW.match(name)
+    if m:
+        cal = f"serve/{m.group('tier')}/serial_us_per_recon"
+    else:
+        cal = CAL_JIT if derived.startswith("cpu-jit") else CAL_PALLAS
     return us / fresh[cal][0]
+
+
+def check_serve_throughput(fresh: Dict[str, Tuple[float, str]]):
+    """Enforce the dynamic-batching win: batched us/recon vs the same
+    tier's serial loop."""
+    fails, warns = [], []
+    for name in sorted(fresh):
+        m = SERVE_ROW.match(name)
+        if not m or m.group("kind") != "batched_us_per_recon":
+            continue
+        tier = m.group("tier")
+        serial = f"serve/{tier}/serial_us_per_recon"
+        if serial not in fresh:
+            fails.append(f"{name}: serial sibling row {serial!r} missing "
+                         f"(API drift?)")
+            continue
+        us, derived = fresh[name]
+        speedup = fresh[serial][0] / max(us, 1e-9)
+        on_tpu = derived.startswith("tpu")
+        line = (f"{name}: {speedup:.1f}x vs serial loop "
+                f"(target {SERVE_MIN_SPEEDUP}x)")
+        if speedup >= SERVE_MIN_SPEEDUP:
+            continue
+        if on_tpu or tier in SERVE_CPU_GATED_TIERS:
+            fails.append(line)
+        else:
+            warns.append(line + " — advisory off-TPU (single-shot compute "
+                         "is not shrunk by packing on CPU)")
+    return fails, warns
 
 
 def check_dtype_siblings(fresh: Dict[str, Tuple[float, str]]):
@@ -126,7 +182,7 @@ def write_baseline(runs: List[Dict[str, Tuple[float, str]]],
     names = sorted(set().union(*[set(r) for r in runs]))
     entries = {}
     for name in names:
-        if not GATE.match(name):
+        if not (GATE.match(name) or SERVE_GATE.match(name)):
             continue
         present = [r for r in runs if name in r]
         entries[name] = {
@@ -162,7 +218,17 @@ def main() -> int:
 
     runs = [parse_csv(p) for p in args.csv]
     for path, run in zip(args.csv, runs):
-        for cal in (CAL_JIT, CAL_PALLAS):
+        # Calibration rows are required only for the row classes present
+        # (a serve-only CSV needs no kernel calibration and vice versa).
+        if any(GATE.match(n) for n in run):
+            for cal in (CAL_JIT, CAL_PALLAS):
+                if cal not in run:
+                    print(f"FAIL: calibration row {cal!r} missing "
+                          f"from {path}")
+                    return 1
+        for tier in {m.group("tier") for m in map(SERVE_ROW.match, run)
+                     if m}:
+            cal = f"serve/{tier}/serial_us_per_recon"
             if cal not in run:
                 print(f"FAIL: calibration row {cal!r} missing from {path}")
                 return 1
@@ -173,7 +239,16 @@ def main() -> int:
 
     baseline = json.loads(pathlib.Path(args.baseline).read_text())["rows"]
     fails, warns = [], []
+    # A class of baseline rows is only compared when the fresh CSV ran that
+    # suite at all (a kernels-only dev run shouldn't fail on serve rows);
+    # CI merges the kernels + serve CSVs so drift in either still fails.
+    has_kernel = any(GATE.match(n) for n in fresh)
+    has_serve = any(SERVE_GATE.match(n) for n in fresh)
     for name, entry in baseline.items():
+        if GATE.match(name) and not has_kernel:
+            continue
+        if SERVE_GATE.match(name) and not has_serve:
+            continue
         if name not in fresh:
             fails.append(f"{name}: missing from fresh run (API drift?)")
             continue
@@ -188,13 +263,16 @@ def main() -> int:
         elif ratio > WARN_RATIO or (ratio > FAIL_RATIO and tiny):
             warns.append(line)
     for name in sorted(set(fresh) - set(baseline)):
-        if GATE.match(name):
+        if GATE.match(name) or SERVE_GATE.match(name):
             warns.append(f"{name}: new row not in baseline "
                          f"(regenerate with --write-baseline)")
 
     dt_fails, dt_warns = check_dtype_siblings(fresh)
     fails.extend(dt_fails)
     warns.extend(dt_warns)
+    sv_fails, sv_warns = check_serve_throughput(fresh)
+    fails.extend(sv_fails)
+    warns.extend(sv_warns)
 
     for w in warns:
         print(f"WARN: {w}")

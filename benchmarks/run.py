@@ -15,13 +15,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_archs, bench_data_consistency,
-                            bench_kernels, bench_projectors, bench_recon)
+                            bench_kernels, bench_projectors, bench_recon,
+                            bench_serve)
     suites = {
         "table1_projectors": bench_projectors.run,
         "recon_pipeline": bench_recon.run,
         "fig3_data_consistency": bench_data_consistency.run,
         "kernels": bench_kernels.run,
         "archs": bench_archs.run,
+        "serve": bench_serve.run,
     }
     print("name,us_per_call,derived", flush=True)
     for name, fn in suites.items():

@@ -12,7 +12,8 @@ the backprojector is the exact transpose of the forward.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Projector, VolumeGeometry, from_config, helical_beam
+from repro.core import (Projector, ProjectorSpec, VolumeGeometry, from_config,
+                        helical_beam)
 from repro.data.metrics import psnr
 from repro.recon import cgls, fista_tv, sirt
 
@@ -30,20 +31,20 @@ cfg = {"geom_type": "helical", "n_turns": 2.0, "pitch": 8.0,
        "n_angles": 48, "n_rows": 12, "n_cols": 48, "sod": 130.0,
        "sdd": 260.0, "pixel_width": 2.0, "pixel_height": 2.0,
        "volume": {"nx": 32, "ny": 32, "nz": 16}}
-assert from_config(cfg).key() == geom.key()
+assert from_config(cfg).canonical_hash() == geom.canonical_hash()
 
 # synthetic object spanning the full z extent (what the helix exists for)
 f = jnp.zeros(vol.shape).at[9:17, 9:20, 2:14].set(0.02)
 f = f.at[20:27, 7:13, 5:11].set(0.035)
 f = f.at[13:19, 21:27, 9:15].set(0.027)
 
-proj = Projector(geom, model="sf")     # modular SF matched pair
+proj = Projector(ProjectorSpec(geom, model="sf"))  # modular SF matched pair
 y = proj(f)
 print(f"sinogram {y.shape}, projector {proj}")
 
-x_sirt = sirt(proj, y, n_iters=30)
-x_cgls, _ = cgls(proj, y, n_iters=20)
-x_tv = fista_tv(proj, y, n_iters=30, beta=2e-3)
+x_sirt = sirt(proj, y, n_iters=30).image
+x_cgls = cgls(proj, y, n_iters=20).image
+x_tv = fista_tv(proj, y, n_iters=30, beta=2e-3).image
 print(f"helical SIRT     PSNR {psnr(x_sirt, f, 0.035):.2f} dB")
 print(f"helical CGLS     PSNR {psnr(x_cgls, f, 0.035):.2f} dB")
 print(f"helical FISTA-TV PSNR {psnr(x_tv, f, 0.035):.2f} dB")

@@ -8,14 +8,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Projector, VolumeGeometry, cone_beam, modular_beam)
+from repro.core import (Projector, ProjectorSpec, VolumeGeometry, cone_beam,
+                        modular_beam)
 from repro.data.metrics import psnr
 from repro.recon import cgls, fista_tv
 
 vol = VolumeGeometry(48, 48, 16)
 geom = cone_beam(n_angles=60, n_rows=32, n_cols=72, vol=vol,
                  sod=200.0, sdd=400.0, pixel_width=2.0, pixel_height=2.0)
-proj = Projector(geom, model="sf")
+proj = Projector(ProjectorSpec(geom, model="sf"))
 
 # synthetic object: two blocks
 f = jnp.zeros(vol.shape).at[14:26, 14:30, 4:12].set(0.02)
@@ -24,8 +25,8 @@ y = proj(f)
 y_noisy = y + 0.01 * float(jnp.abs(y).max()) * jax.random.normal(
     jax.random.PRNGKey(0), y.shape)
 
-x_cgls, _ = cgls(proj, y_noisy, n_iters=25)
-x_tv = fista_tv(proj, y_noisy, n_iters=40, beta=2e-3)
+x_cgls = cgls(proj, y_noisy, n_iters=25).image
+x_tv = fista_tv(proj, y_noisy, n_iters=40, beta=2e-3).image
 print(f"cone-beam CGLS     PSNR {psnr(x_cgls, f, 0.035):.2f} dB")
 print(f"cone-beam FISTA-TV PSNR {psnr(x_tv, f, 0.035):.2f} dB")
 
@@ -38,7 +39,7 @@ eu = np.stack([-np.sin(ang), np.cos(ang), np.zeros_like(ang)], -1)
 ev = np.cross(src / np.linalg.norm(src, axis=1, keepdims=True), eu)
 geom_mod = modular_beam(src, ctr, eu, ev, n_rows=32, n_cols=72, vol=vol,
                         pixel_width=2.0, pixel_height=2.0)
-proj_mod = Projector(geom_mod)          # Joseph ray-marching path
+proj_mod = Projector(ProjectorSpec(geom_mod))  # Joseph ray-marching path
 y_mod = proj_mod(f)
-x_mod, _ = cgls(proj_mod, y_mod, n_iters=25)
+x_mod = cgls(proj_mod, y_mod, n_iters=25).image
 print(f"modular   CGLS     PSNR {psnr(x_mod, f, 0.035):.2f} dB")

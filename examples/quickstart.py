@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Projector, VolumeGeometry, parallel_beam
+from repro.core import Projector, ProjectorSpec, VolumeGeometry, parallel_beam
 from repro.data.metrics import psnr
 from repro.data.phantoms import shepp_logan_2d
 from repro.recon import sirt
@@ -17,19 +17,25 @@ vol = VolumeGeometry(nx=128, ny=128, nz=1, dx=1.0, dy=1.0, dz=1.0)
 geom = parallel_beam(n_angles=180, n_rows=1, n_cols=192, vol=vol,
                      pixel_width=1.0, angular_range=180.0)
 
-# 2. a differentiable projector (matched A / A^T pair)
-proj = Projector(geom, model="sf")     # Separable Footprint model
+# 2. a differentiable projector.  The ProjectorSpec is the one frozen
+#    description of the operator (geometry + model + backend + precision);
+#    it doubles as the op-cache key and the serving bucket key.
+spec = ProjectorSpec(geom, model="sf")  # Separable Footprint model
+proj = Projector(spec)
 
 # 3. forward project a phantom
 f = jnp.asarray(shepp_logan_2d(vol)[:, :, None]) * 0.02   # 1/mm
 sino = proj(f)
 print(f"volume {f.shape} -> sinogram {sino.shape}")
 
-# 4. reconstruct
+# 4. reconstruct — iterative solvers take the spec (or the projector)
+#    and return a ReconResult(image, iterations, residual_history)
 rec_fbp = proj.fbp(sino)
-rec_sirt = sirt(proj, sino, n_iters=50)
+res = sirt(spec, sino, n_iters=50)
 print(f"FBP  PSNR {psnr(rec_fbp, f, 0.02):.2f} dB")
-print(f"SIRT PSNR {psnr(rec_sirt, f, 0.02):.2f} dB")
+print(f"SIRT PSNR {psnr(res.image, f, 0.02):.2f} dB "
+      f"(residual {float(res.final_residual):.3g} "
+      f"after {res.iterations} iters)")
 
 # 5. gradients flow through the projector (the paper's whole point):
 loss = lambda x: 0.5 * jnp.sum((proj(x) - sino) ** 2)

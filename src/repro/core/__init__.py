@@ -12,11 +12,12 @@ inside `repro.kernels` (the kernels register themselves with ops at import).
 from repro.core.geometry import (CTGeometry, VolumeGeometry, cone_beam,
                                  fan_beam, from_config, helical_beam,
                                  modular_beam, parallel_beam)
+from repro.core.spec import ProjectorSpec
 
 __all__ = [
     "CTGeometry", "VolumeGeometry", "parallel_beam", "fan_beam", "cone_beam",
     "modular_beam", "helical_beam", "from_config", "Projector",
-    "forward_project", "back_project", "fbp",
+    "ProjectorSpec", "forward_project", "back_project", "fbp",
 ]
 
 # fbp has no import cycle with kernels and must be bound eagerly: once the

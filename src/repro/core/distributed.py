@@ -32,6 +32,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core.geometry import CTGeometry
+from repro.core.spec import ProjectorSpec
 from repro.kernels import ops
 
 
@@ -83,7 +84,8 @@ def make_distributed_projector(geom: CTGeometry, mesh: Mesh,
 
     def _local_ops(angles_row):
         g = lgeom.with_angles(np.asarray(angles_row))
-        return ops.get_ops(g, model, backend, mode=mode)
+        return ops.get_ops(ProjectorSpec(g, model=model, backend=backend,
+                                         mode=mode))
 
     # Geometry must be static: build one jitted op per angle chunk and
     # dispatch on the shard index via lax.switch.

@@ -44,6 +44,7 @@ intended) to close over it inside ``jax.jit``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import math
 from typing import Optional, Tuple
@@ -64,6 +65,29 @@ __all__ = [
 
 def _as_f32(a) -> np.ndarray:
     return np.asarray(a, dtype=np.float32)
+
+
+def _canon_value(v):
+    """Canonicalize one geometry field for the stable content key.
+
+    Floats round through float32 (what every kernel consumes) so python
+    floats and numpy scalars of the same value serialize identically; arrays
+    are replaced by a content digest of their canonical float32 bytes."""
+    if isinstance(v, np.ndarray):
+        a = np.ascontiguousarray(v, dtype=np.float32)
+        return ["ndarray", list(a.shape),
+                hashlib.sha256(a.tobytes()).hexdigest()]
+    if isinstance(v, (bool, str)) or v is None:
+        return v
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        return float(np.float32(v))
+    if isinstance(v, (tuple, list)):
+        return [_canon_value(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _canon_value(x) for k, x in sorted(v.items())}
+    return str(v)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,11 +254,76 @@ class CTGeometry:
 
     # Hashable / usable as a static jit argument.
     def key(self) -> str:
+        """Canonical content serialization — stable across construction paths.
+
+        Two geometries describing the same scanner must produce the *same*
+        string no matter how they were built (constructor call, ``from_config``
+        round-trip, numpy vs python scalars): this key is the op-cache key and
+        the serving admission-bucket key, so an unstable serialization would
+        silently duplicate compiled kernels and split server batches.
+
+        Stability rules:
+          * every scalar float is canonicalized through float32 (the dtype
+            all kernels consume) before serialization, so ``sod=200.0`` and
+            ``sod=np.float32(200)`` collide — previously numpy scalars fell
+            into ``json.dumps(default=str)`` and produced a *different* key
+            than an equal python float;
+          * per-view modular frame arrays are hashed by *content* (sha256 of
+            their canonical float32 bytes), never by repr — identical frames
+            always share a key, and the key stays short for 1000-view scans.
+        """
+        cached = getattr(self, "_key_cache", None)
+        if cached is not None:
+            return cached
         d = dataclasses.asdict(self)
-        for k, v in d.items():
-            if isinstance(v, np.ndarray):
-                d[k] = v.tolist()
-        return json.dumps(d, sort_keys=True, default=str)
+        canon = {k: _canon_value(v) for k, v in sorted(d.items())}
+        out = json.dumps(canon, sort_keys=True)
+        object.__setattr__(self, "_key_cache", out)
+        return out
+
+    def canonical_hash(self) -> str:
+        """Short content digest of :meth:`key` — equal geometries (up to the
+        float32 precision the kernels run at) share this hash.  This is the
+        serving layer's admission-bucket key and part of
+        ``ProjectorSpec.cache_key()``."""
+        cached = getattr(self, "_hash_cache", None)
+        if cached is not None:
+            return cached
+        h = hashlib.sha256(self.key().encode()).hexdigest()[:16]
+        object.__setattr__(self, "_hash_cache", h)
+        return h
+
+    def to_config(self) -> dict:
+        """Plain JSON-serializable dict accepted by :func:`from_config`.
+
+        Round-trip contract (the serving layer relies on it):
+        ``from_config(g.to_config()).canonical_hash() == g.canonical_hash()``.
+        """
+        vol = dataclasses.asdict(self.vol)
+        if self.geom_type == "modular":
+            return {
+                "geom_type": "modular", "volume": vol,
+                "n_rows": self.n_rows, "n_cols": self.n_cols,
+                "pixel_width": self.pixel_width,
+                "pixel_height": self.pixel_height,
+                "source_pos": np.asarray(self.source_pos).tolist(),
+                "det_center": np.asarray(self.det_center).tolist(),
+                "det_u": np.asarray(self.det_u).tolist(),
+                "det_v": np.asarray(self.det_v).tolist(),
+            }
+        cfg = {
+            "geom_type": self.geom_type, "volume": vol,
+            "n_angles": self.n_angles, "n_rows": self.n_rows,
+            "n_cols": self.n_cols,
+            "pixel_width": self.pixel_width,
+            "pixel_height": self.pixel_height,
+            "angles": list(self.angles),
+            "center_row": self.center_row, "center_col": self.center_col,
+        }
+        if self.geom_type in ("fan", "cone"):
+            cfg.update(sod=self.sod, sdd=self.sdd,
+                       detector_type=self.detector_type)
+        return cfg
 
 
 # ---------------------------------------------------------------------- #

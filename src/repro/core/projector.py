@@ -4,7 +4,9 @@ This is the JAX analogue of the paper's ``torch.nn.Module``-derived
 ``Projector`` (their Listing 1): a differentiable object that can be dropped
 into any training/inference pipeline.
 
-    >>> proj = Projector(geom)                 # geometry = static metadata
+    >>> spec = ProjectorSpec(geom)             # frozen op description
+    >>> proj = Projector(spec)                 # (legacy Projector(geom, ...)
+    ...                                        #  still works via the shim)
     >>> sino = proj(volume)                    # A x        (differentiable)
     >>> vol  = proj.backproject(sino)          # A^T y      (differentiable)
     >>> rec  = proj.fbp(sino)                  # filtered backprojection
@@ -26,16 +28,23 @@ import jax.numpy as jnp
 
 from repro.core.fbp import fbp as _fbp
 from repro.core.geometry import CTGeometry
-from repro.kernels import ops, precision
+from repro.core.spec import ProjectorSpec, as_spec
+from repro.kernels import ops
 from repro.kernels.tune import KernelConfig
 
 
 class Projector:
-    def __init__(self, geom: CTGeometry, model: str = "sf",
+    def __init__(self, spec_or_geom, model: str = "sf",
                  backend: str = "auto",
                  config: Optional[KernelConfig] = None,
                  mode: str = "auto", compute_dtype=None):
-        """``mode`` selects between the exact kernels and the approximate
+        """Canonical form: ``Projector(ProjectorSpec(geom, ...))`` — the
+        spec is the single frozen description of the operator and doubles
+        as the op-cache / serving-bucket key.  The legacy geometry-first
+        form (``Projector(geom, model=..., mode=...)``) keeps working via
+        the deprecation shim in :mod:`repro.core.spec`.
+
+        ``mode`` selects between the exact kernels and the approximate
         lane-packed cone pair: "exact" always uses the exact kernels,
         "packed" forces the packed pair (small-cone-angle pre-resample),
         "auto" (default) uses packed only when the geometry's derived error
@@ -45,26 +54,40 @@ class Projector:
         ``compute_dtype`` sets the kernel tile precision ("bfloat16" |
         "float32"; None follows the input dtype): tiles stream at that
         dtype, accumulation stays f32, outputs keep the input's dtype —
-        see kernels/precision.py for the policy and its tolerance model."""
-        if model not in ("sf", "joseph"):
-            raise ValueError(f"unknown projector model {model!r}")
-        if mode not in ("auto", "exact", "packed"):
-            raise ValueError(f"unknown mode {mode!r}; expected "
-                             f"'auto', 'exact' or 'packed'")
-        if config is not None and not isinstance(config, KernelConfig):
-            raise TypeError(f"config must be a KernelConfig, got {config!r}")
-        self.geom = geom
-        # Modular geometries run the SF matched pair like every other
-        # geometry now (Pallas for axial frames — incl. helical — via the
-        # registered `supports` gate); tilted frames fall back to the Joseph
-        # ray-marcher inside the ref dispatch, so "sf" is always safe here.
-        self.model = model
-        self.backend = backend
-        self.config = config
-        self.mode = mode
-        # Validates eagerly (raises ValueError on junk) and canonicalizes
-        # aliases ("bf16" -> "bfloat16") so the op-cache key is stable.
-        self.compute_dtype = precision.normalize(compute_dtype)
+        see kernels/precision.py for the policy and its tolerance model.
+
+        Modular geometries run the SF matched pair like every other
+        geometry (Pallas for axial frames — incl. helical — via the
+        registered `supports` gate); tilted frames fall back to the Joseph
+        ray-marcher inside the ref dispatch, so "sf" is always safe here."""
+        self.spec = as_spec(spec_or_geom, "Projector", model=model,
+                            backend=backend, mode=mode,
+                            compute_dtype=compute_dtype, config=config)
+
+    # Back-compat attribute surface: pre-spec code read these directly.
+    @property
+    def geom(self) -> CTGeometry:
+        return self.spec.geom
+
+    @property
+    def model(self) -> str:
+        return self.spec.model
+
+    @property
+    def backend(self) -> str:
+        return self.spec.backend
+
+    @property
+    def config(self) -> Optional[KernelConfig]:
+        return self.spec.config
+
+    @property
+    def mode(self) -> str:
+        return self.spec.mode
+
+    @property
+    def compute_dtype(self):
+        return self.spec.compute_dtype
 
     @classmethod
     def from_model_config(cls, geom: CTGeometry, model_config, **kwargs):
@@ -74,19 +97,16 @@ class Projector:
         head shares one precision policy with the model around it."""
         kwargs.setdefault("compute_dtype",
                           getattr(model_config, "compute_dtype", None))
-        return cls(geom, **kwargs)
+        return cls(ProjectorSpec(geom, **kwargs))
 
     # -- linear ops -------------------------------------------------------- #
     def __call__(self, volume):
-        return ops.forward_project(volume, self.geom, self.model,
-                                   self.backend, self.config, self.mode,
-                                   self.compute_dtype)
+        return ops.forward_project(volume, self.spec)
 
     forward = __call__
 
     def backproject(self, sino):
-        return ops.back_project(sino, self.geom, self.model, self.backend,
-                                self.config, self.mode, self.compute_dtype)
+        return ops.back_project(sino, self.spec)
 
     @property
     def T(self):

@@ -39,13 +39,22 @@ f32-accumulate policy of :mod:`repro.kernels.precision`; the ref backend
 applies the matching quantize-data-only policy so oracles stay
 dtype-matched.
 
+Specs: every entry point canonically takes a
+:class:`repro.core.spec.ProjectorSpec` — the frozen consolidation of
+``(geom, model, backend, mode, compute_dtype, config)``.  Geometry-first
+calls (``get_ops(geom, model=...)``) keep working through the deprecation
+shim in :mod:`repro.core.spec` (one warning per entry point per process).
+
 Tile/block sizes come from :class:`repro.kernels.tune.KernelConfig`; pass
 ``config=`` to pin one explicitly (it becomes part of the op-cache key, so a
 fixed config never retraces).  The op cache is a bounded LRU keyed on
-*geometry content* (``CTGeometry.key()``) plus model/backend/config/mode and
-the dtype pair (normalized compute policy, input dtype), so equal geometries
-share ops and evicted entries release both the traced functions and the
-geometry they close over.
+``spec.cache_key()`` — geometry *content* (``CTGeometry.canonical_hash()``)
+plus model/backend/config/resolved-mode and the dtype pair (normalized
+compute policy, input dtype) — so equal geometries share ops and evicted
+entries release both the traced functions and the geometry they close over.
+:func:`cache_stats` exposes size/hit/miss counters; the serving layer's
+warm-path guarantee ("a primed server never compiles on the request path")
+is asserted against them.
 """
 from __future__ import annotations
 
@@ -56,6 +65,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.geometry import CTGeometry
+from repro.core.spec import ProjectorSpec, as_spec
 from repro.kernels import precision, ref, tune
 
 
@@ -180,12 +190,16 @@ def _resolve_mode(geom: CTGeometry, model: str, mode: str,
     return "exact"
 
 
-def resolve_mode(geom: CTGeometry, model: str = "sf", backend: str = "auto",
+def resolve_mode(geom, model: str = "sf", backend: str = "auto",
                  mode: str = "auto") -> str:
     """The concrete kernel mode ("exact" | "packed") that
     ``forward_project``/``back_project`` would dispatch for these arguments —
     exposed so callers (and tests) can observe the ``mode="auto"`` policy
-    without probing numerics."""
+    without probing numerics.  Accepts a ProjectorSpec or a geometry (this
+    is a read-only probe, so the geometry form is not deprecated here)."""
+    if isinstance(geom, ProjectorSpec):
+        geom, model, backend, mode = (geom.geom, geom.model, geom.backend,
+                                      geom.mode)
     return _resolve_mode(geom, model, mode, _use_pallas(geom, model, backend))
 
 
@@ -228,37 +242,41 @@ def _build(geom: CTGeometry, model: str, backend: str,
     return Ops(fp, bp, fp_b, bp_b, config)
 
 
-# Bounded LRU over op bundles.  Keys are geometry *content* (not object
-# identity), so two equal geometries share one entry, and eviction drops the
-# traced ops together with the geometry captured in their closures.
+# Bounded LRU over op bundles.  Keys are ``spec.cache_key()`` — geometry
+# *content* (not object identity), so two equal geometries share one entry,
+# and eviction drops the traced ops together with the geometry captured in
+# their closures.
 _OPS_CACHE: "OrderedDict[Tuple, Ops]" = OrderedDict()
 _OPS_CACHE_SIZE = 256
+_CACHE_HITS = 0
+_CACHE_MISSES = 0
 
 
-def _get_bundle(geom: CTGeometry, model: str = "sf", backend: str = "auto",
-                config: Optional[tune.KernelConfig] = None,
-                mode: str = "auto", compute_dtype=None,
-                in_dtype=None) -> Ops:
-    use_pallas = _use_pallas(geom, model, backend)
-    rmode = _resolve_mode(geom, model, mode, use_pallas)
-    cdt = precision.normalize(compute_dtype)
+def _get_bundle(spec: ProjectorSpec, in_dtype=None) -> Ops:
+    global _CACHE_HITS, _CACHE_MISSES
+    geom = spec.geom
+    use_pallas = _use_pallas(geom, spec.model, spec.backend)
+    rmode = _resolve_mode(geom, spec.model, spec.mode, use_pallas)
     # The cache is keyed on the *user's* config value: None means "let the
     # kernel resolve per call" (note: re-registering configs after a bundle
     # is cached requires clear_cache() to take effect on the None key).
     # Mode is keyed on the *resolved* value so "auto" and an explicit
     # "packed"/"exact" share one bundle when they dispatch the same pair.
-    # Dtype is part of the content key: the normalized compute policy plus
-    # the input dtype the bundle was first applied to — a cdt=None bundle
-    # follows its input's dtype, so f32 and bf16 callers must not share
-    # traced closures (and even fixed-cdt bundles key the input dtype so
-    # the output dtype stays caller-consistent).
+    # Dtype is part of the content key: the normalized compute policy (a
+    # spec field) plus the input dtype the bundle was first applied to — a
+    # cdt=None bundle follows its input's dtype, so f32 and bf16 callers
+    # must not share traced closures (and even fixed-cdt bundles key the
+    # input dtype so the output dtype stays caller-consistent).
     idt = None if in_dtype is None else jnp.dtype(in_dtype).name
-    key = (geom.key(), model, backend, config, rmode, cdt, idt)
+    key = spec.cache_key(rmode, idt)
     hit = _OPS_CACHE.get(key)
     if hit is not None:
+        _CACHE_HITS += 1
         _OPS_CACHE.move_to_end(key)
         return hit
-    bundle = _build(geom, model, backend, config, use_pallas, rmode, cdt)
+    _CACHE_MISSES += 1
+    bundle = _build(geom, spec.model, spec.backend, spec.config, use_pallas,
+                    rmode, spec.compute_dtype)
     _OPS_CACHE[key] = bundle
     while len(_OPS_CACHE) > _OPS_CACHE_SIZE:
         _OPS_CACHE.popitem(last=False)
@@ -270,10 +288,23 @@ def clear_cache() -> None:
     _OPS_CACHE.clear()
 
 
-def get_ops(geom: CTGeometry, model: str = "sf", backend: str = "auto",
+def cache_stats() -> Dict[str, int]:
+    """Op-cache observability: ``{"size", "hits", "misses"}``.
+
+    The serving layer's warm-path guarantee is checked against these — on a
+    warm server, request traffic must add zero entries and zero misses."""
+    return {"size": len(_OPS_CACHE), "hits": _CACHE_HITS,
+            "misses": _CACHE_MISSES}
+
+
+def get_ops(spec_or_geom, model: str = "sf", backend: str = "auto",
             config: Optional[tune.KernelConfig] = None,
             mode: str = "auto", compute_dtype=None) -> Tuple[Callable, Callable]:
-    """Return the (forward, back) matched differentiable pair for a geometry.
+    """Return the (forward, back) matched differentiable pair for a spec.
+
+    Canonical form: ``get_ops(ProjectorSpec(geom, ...))``.  The legacy
+    geometry-first form (``get_ops(geom, model=..., ...)``) still works via
+    the deprecation shim in :mod:`repro.core.spec`.
 
     ``mode`` selects between the exact kernels and an approximate *packed*
     pair where one is registered (cone): "exact" forces the exact pair,
@@ -286,10 +317,11 @@ def get_ops(geom: CTGeometry, model: str = "sf", backend: str = "auto",
     "float32"; None follows the input dtype) — accumulation is always f32
     and outputs keep the caller's dtype (see kernels/precision.py).
 
-    Repeated calls with an equal geometry/model/backend/config/mode/dtype
-    return the *same* function objects, so jit caches built around them
-    never retrace."""
-    bundle = _get_bundle(geom, model, backend, config, mode, compute_dtype)
+    Repeated calls with an equal spec return the *same* function objects, so
+    jit caches built around them never retrace."""
+    spec = as_spec(spec_or_geom, "get_ops", model=model, backend=backend,
+                   mode=mode, compute_dtype=compute_dtype, config=config)
+    bundle = _get_bundle(spec)
     return bundle.fp, bundle.bp
 
 
@@ -320,21 +352,31 @@ def _apply(op: Callable, op_batched: Optional[Callable], x, ndim_in: int):
     return out if extra == 1 else out.reshape(lead + out.shape[1:])
 
 
-def forward_project(f, geom: CTGeometry, model: str = "sf",
+def forward_project(f, spec_or_geom, model: str = "sf",
                     backend: str = "auto",
                     config: Optional[tune.KernelConfig] = None,
                     mode: str = "auto", compute_dtype=None):
-    """A @ f.  ``f``: (..., nx, ny, nz) -> (..., n_angles, n_rows, n_cols)."""
-    b = _get_bundle(geom, model, backend, config, mode, compute_dtype,
-                    in_dtype=f.dtype)
+    """A @ f.  ``f``: (..., nx, ny, nz) -> (..., n_angles, n_rows, n_cols).
+
+    Canonical form: ``forward_project(f, ProjectorSpec(geom, ...))``; the
+    geometry-first form survives via the deprecation shim."""
+    spec = as_spec(spec_or_geom, "forward_project", model=model,
+                   backend=backend, mode=mode, compute_dtype=compute_dtype,
+                   config=config)
+    b = _get_bundle(spec, in_dtype=f.dtype)
     return _apply(b.fp, b.fp_batched, f, 3)
 
 
-def back_project(p, geom: CTGeometry, model: str = "sf",
+def back_project(p, spec_or_geom, model: str = "sf",
                  backend: str = "auto",
                  config: Optional[tune.KernelConfig] = None,
                  mode: str = "auto", compute_dtype=None):
-    """A^T @ p.  ``p``: (..., n_angles, n_rows, n_cols) -> (..., nx, ny, nz)."""
-    b = _get_bundle(geom, model, backend, config, mode, compute_dtype,
-                    in_dtype=p.dtype)
+    """A^T @ p.  ``p``: (..., n_angles, n_rows, n_cols) -> (..., nx, ny, nz).
+
+    Canonical form: ``back_project(p, ProjectorSpec(geom, ...))``; the
+    geometry-first form survives via the deprecation shim."""
+    spec = as_spec(spec_or_geom, "back_project", model=model,
+                   backend=backend, mode=mode, compute_dtype=compute_dtype,
+                   config=config)
+    b = _get_bundle(spec, in_dtype=p.dtype)
     return _apply(b.bp, b.bp_batched, p, 3)

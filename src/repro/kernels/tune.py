@@ -145,6 +145,13 @@ def shape_class(geom: CTGeometry, batch: int = 1,
 # --------------------------------------------------------------------------- #
 _REGISTRY: Dict[Tuple, KernelConfig] = {}       # explicit + autotuned entries
 _AUTOTUNED: Dict[Tuple, KernelConfig] = {}      # measured results only
+_SWEEPS = 0                                     # autotune() invocations
+
+
+def sweep_count() -> int:
+    """Number of ``autotune`` invocations this process (warm-path probe:
+    a primed serving instance must answer traffic without sweeping)."""
+    return _SWEEPS
 
 
 def register_config(cls_key: Tuple, cfg: KernelConfig) -> None:
@@ -403,6 +410,8 @@ def autotune(geom: CTGeometry, batch: int = 1, dtype=jnp.float32,
     without measuring.  FP and BP are timed independently and the best
     (bu, ba) is combined with the best (bg, bab).
     """
+    global _SWEEPS
+    _SWEEPS += 1
     key = shape_class(geom, batch, dtype, packed)
     if not _on_tpu():
         cfg = heuristic_config(geom, batch, dtype, packed)

@@ -1,9 +1,13 @@
 """Classical + hybrid reconstruction algorithms built on the matched
-projector pairs — the paper's 'end-to-end reconstruction pipeline' layer."""
+projector pairs — the paper's 'end-to-end reconstruction pipeline' layer.
+
+All iterative solvers accept a ``ProjectorSpec`` or ``Projector`` and
+return a :class:`~repro.recon.result.ReconResult`."""
+from repro.recon.result import ReconResult, as_projector
 from repro.recon.sirt import sirt
 from repro.recon.cgls import cgls
 from repro.recon.fista_tv import fista_tv, tv_norm
 from repro.recon.completion import (complete_and_refine, data_consistency_refine)
 
-__all__ = ["sirt", "cgls", "fista_tv", "tv_norm",
-           "complete_and_refine", "data_consistency_refine"]
+__all__ = ["ReconResult", "as_projector", "sirt", "cgls", "fista_tv",
+           "tv_norm", "complete_and_refine", "data_consistency_refine"]

@@ -17,12 +17,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.projector import Projector
+from repro.recon.result import as_projector
 
 
-def data_consistency_refine(projector: Projector, x_net, y, mask,
+def data_consistency_refine(spec_or_projector, x_net, y, mask,
                             n_iters: int = 20, beta: float = 0.1):
     """CG on  (A^T M A + beta I) x = A^T M y + beta x_net."""
+    projector = as_projector(spec_or_projector)
+
     def op(x):
         return projector.T(mask * projector(x)) + beta * x
 
@@ -46,9 +48,10 @@ def data_consistency_refine(projector: Projector, x_net, y, mask,
     return x
 
 
-def complete_and_refine(projector: Projector, x_net, y, mask,
+def complete_and_refine(spec_or_projector, x_net, y, mask,
                         n_iters: int = 20, beta: float = 0.1):
     """Full paper §4 inference pipeline.  Returns (x_refined, completed_sino)."""
+    projector = as_projector(spec_or_projector)
     x = data_consistency_refine(projector, x_net, y, mask, n_iters, beta)
     completed = mask * y + (1.0 - mask) * projector(x)
     return x, completed

@@ -1,0 +1,72 @@
+"""Uniform solver result + input coercion for the recon layer.
+
+Every iterative solver (``sirt`` / ``cgls`` / ``fista_tv``) returns a
+:class:`ReconResult` and accepts either a :class:`~repro.core.spec.ProjectorSpec`
+or an already-built :class:`~repro.core.projector.Projector` — the serving
+layer hands specs straight through, interactive code keeps its Projector.
+
+``ReconResult`` is registered as a JAX pytree (``image`` and
+``residual_history`` are leaves, ``iterations`` is static aux data), so a
+solver closure returning one can be ``jax.jit``-ed and vmapped as-is — this
+is what lets the serving executors compile whole solver calls per bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core.projector import Projector
+from repro.core.spec import ProjectorSpec
+
+__all__ = ["ReconResult", "as_projector"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconResult:
+    """What an iterative solver hands back.
+
+    Attributes:
+        image:            the reconstruction; leading batch dims (if the
+                          sinogram had any) are preserved.
+        iterations:       number of outer iterations run (static).
+        residual_history: per-iteration data-residual norm ``||A x_k - y||``
+                          (masked where a mask was given), shape
+                          ``batch_dims + (iterations,)``.
+    """
+
+    image: Any
+    iterations: int
+    residual_history: Any
+
+    @property
+    def final_residual(self):
+        return self.residual_history[..., -1]
+
+
+def _flatten(r: ReconResult):
+    return (r.image, r.residual_history), r.iterations
+
+
+def _unflatten(iterations, children):
+    image, residual_history = children
+    return ReconResult(image=image, iterations=iterations,
+                       residual_history=residual_history)
+
+
+jax.tree_util.register_pytree_node(ReconResult, _flatten, _unflatten)
+
+
+def as_projector(spec_or_projector) -> Projector:
+    """Coerce a solver's operator argument to a :class:`Projector`.
+
+    Specs are the canonical currency (hashable, bucketable); a prebuilt
+    Projector passes through so repeated solves reuse its spec."""
+    if isinstance(spec_or_projector, Projector):
+        return spec_or_projector
+    if isinstance(spec_or_projector, ProjectorSpec):
+        return Projector(spec_or_projector)
+    raise TypeError(
+        f"expected a ProjectorSpec or Projector, "
+        f"got {type(spec_or_projector).__name__}")

@@ -308,9 +308,9 @@ def test_recon_helical_out_of_the_box():
     proj = Projector(g)
     y = proj(f)
     err0 = float(jnp.linalg.norm(f))
-    x_s = sirt(proj, y, n_iters=30)
+    x_s = sirt(proj, y, n_iters=30).image
     assert float(jnp.linalg.norm(x_s - f)) < 0.5 * err0
-    x_c, _ = cgls(proj, y, n_iters=15)
+    x_c = cgls(proj, y, n_iters=15).image
     assert float(jnp.linalg.norm(x_c - f)) < 0.35 * err0
-    x_t = fista_tv(proj, y, n_iters=15, beta=1e-5)
+    x_t = fista_tv(proj, y, n_iters=15, beta=1e-5).image
     assert float(jnp.linalg.norm(x_t - f)) < 0.6 * err0

@@ -4,10 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Projector, VolumeGeometry, parallel_beam, cone_beam
+from repro.core import (Projector, ProjectorSpec, VolumeGeometry, cone_beam,
+                        parallel_beam)
 from repro.data.phantoms import shepp_logan_2d
-from repro.recon import (cgls, complete_and_refine, fista_tv, sirt,
-                         tv_norm)
+from repro.recon import (ReconResult, cgls, complete_and_refine, fista_tv,
+                         sirt, tv_norm)
 
 
 @pytest.fixture(scope="module")
@@ -15,7 +16,7 @@ def setup():
     vol = VolumeGeometry(48, 48, 1)
     g = parallel_beam(60, 1, 72, vol)
     f = jnp.asarray(shepp_logan_2d(vol)[:, :, None]) * 0.02
-    proj = Projector(g, "sf")
+    proj = Projector(ProjectorSpec(g))
     return proj, f, proj(f)
 
 
@@ -25,29 +26,60 @@ def _rel(a, b):
 
 def test_sirt_converges(setup):
     proj, f, y = setup
-    x20 = sirt(proj, y, n_iters=20)
-    x80 = sirt(proj, y, n_iters=80)
-    assert _rel(x80, f) < _rel(x20, f) < _rel(jnp.zeros_like(f), f)
-    assert _rel(x80, f) < 0.25
+    x20 = sirt(proj, y, n_iters=20).image
+    res = sirt(proj, y, n_iters=80)
+    assert isinstance(res, ReconResult) and res.iterations == 80
+    assert res.residual_history.shape == (80,)
+    assert _rel(res.image, f) < _rel(x20, f) < _rel(jnp.zeros_like(f), f)
+    assert _rel(res.image, f) < 0.25
 
 
-def test_cgls_monotone_normal_residual(setup):
+def test_sirt_accepts_spec(setup):
     proj, f, y = setup
-    x, hist = cgls(proj, y, n_iters=25)
-    h = np.asarray(hist)
-    assert h[-1] < 1e-3 * h[0]      # normal-eqn residual collapses
+    from_spec = sirt(proj.spec, y, n_iters=10)
+    from_proj = sirt(proj, y, n_iters=10)
+    np.testing.assert_allclose(np.asarray(from_spec.image),
+                               np.asarray(from_proj.image), rtol=0, atol=0)
+
+
+def test_cgls_monotone_residual(setup):
+    proj, f, y = setup
+    res = cgls(proj, y, n_iters=25)
+    h = np.asarray(res.residual_history)
+    assert h.shape == (25,)
+    assert h[-1] < 0.05 * h[0]      # data residual collapses
     assert (np.diff(h) <= 1e-6 * h[0]).mean() > 0.7   # mostly decreasing
-    assert _rel(x, f) < 0.17
+    assert float(res.final_residual) == pytest.approx(h[-1])
+    assert _rel(res.image, f) < 0.17
 
 
 def test_fista_tv_denoises(setup):
     proj, f, y = setup
     noisy = y + 0.05 * float(jnp.abs(y).max()) * jax.random.normal(
         jax.random.PRNGKey(0), y.shape)
-    x_plain, _ = cgls(proj, noisy, n_iters=30)
-    x_tv = fista_tv(proj, noisy, n_iters=30, beta=2e-3)
+    x_plain = cgls(proj, noisy, n_iters=30).image
+    x_tv = fista_tv(proj, noisy, n_iters=30, beta=2e-3).image
     assert float(tv_norm(x_tv)) < float(tv_norm(x_plain))
     assert _rel(x_tv, f) < _rel(x_plain, f)
+
+
+def test_batched_solvers_match_per_sample(setup):
+    """A stacked batch must reconstruct exactly like per-sample solves —
+    the property the serving layer's packed dispatch relies on."""
+    proj, f, y = setup
+    y2 = jnp.stack([y, 0.5 * y])
+    from repro.recon.fista_tv import power_iteration
+    L = float(power_iteration(proj)) * 1.05
+    for solver, kw in ((sirt, {}), (cgls, {}),
+                       (fista_tv, {"beta": 2e-3, "L": L})):
+        batched = solver(proj, y2, n_iters=8, **kw)
+        assert batched.image.shape == (2,) + proj.vol_shape()
+        assert batched.residual_history.shape == (2, 8)
+        for i, yi in enumerate((y, 0.5 * y)):
+            single = solver(proj, yi, n_iters=8, **kw)
+            np.testing.assert_allclose(np.asarray(batched.image[i]),
+                                       np.asarray(single.image),
+                                       rtol=2e-5, atol=2e-6)
 
 
 def test_data_consistency_refine_improves(setup):
@@ -68,10 +100,10 @@ def test_sirt_cone(setup):
     vol = VolumeGeometry(32, 32, 8)
     g = cone_beam(40, 16, 48, vol, sod=150.0, sdd=300.0,
                   pixel_width=2.0, pixel_height=2.0)
-    proj = Projector(g, "sf")
+    proj = Projector(ProjectorSpec(g))
     f = jnp.zeros(vol.shape).at[12:20, 12:20, 2:6].set(0.02)
     y = proj(f)
-    x = sirt(proj, y, n_iters=60)
+    x = sirt(proj, y, n_iters=60).image
     assert _rel(x, f) < 0.35
 
 
@@ -79,5 +111,5 @@ def test_masked_sirt_limited_angle(setup):
     proj, f, y = setup
     mask = np.zeros(proj.sino_shape(), np.float32)
     mask[:20] = 1.0
-    x = sirt(proj, y * mask, n_iters=60, mask=jnp.asarray(mask))
+    x = sirt(proj, y * mask, n_iters=60, mask=jnp.asarray(mask)).image
     assert _rel(x, f) < 0.8  # severely ill-posed (60 of 180 deg) but bounded

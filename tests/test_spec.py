@@ -1,0 +1,189 @@
+"""ProjectorSpec: validation, content identity, cache keys, legacy shims,
+and the stable-geometry-hash bugfix."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Projector, ProjectorSpec, VolumeGeometry, cone_beam,
+                        fan_beam, from_config, helical_beam, modular_beam,
+                        parallel_beam)
+from repro.core.spec import as_spec, reset_legacy_warnings
+from repro.kernels import ops
+from repro.kernels.tune import KernelConfig
+
+
+@pytest.fixture()
+def geom():
+    return parallel_beam(12, 1, 16, VolumeGeometry(8, 8, 1))
+
+
+def _geoms():
+    vol = VolumeGeometry(8, 8, 4)
+    ang = np.linspace(0, 2 * np.pi, 6, endpoint=False)
+    src = np.stack([100 * np.cos(ang), 100 * np.sin(ang),
+                    np.zeros_like(ang)], -1)
+    eu = np.stack([-np.sin(ang), np.cos(ang), np.zeros_like(ang)], -1)
+    ev = np.tile(np.array([0.0, 0.0, 1.0]), (len(ang), 1))
+    return {
+        "parallel": parallel_beam(12, 1, 16, VolumeGeometry(8, 8, 1)),
+        "fan": fan_beam(12, 1, 16, VolumeGeometry(8, 8, 1), sod=50.0,
+                        sdd=100.0),
+        "cone": cone_beam(6, 4, 16, vol, sod=50.0, sdd=100.0),
+        "modular": modular_beam(src, -src, eu, ev, n_rows=4, n_cols=16,
+                                vol=vol),
+        "helical": helical_beam(1.5, 4.0, 12, 4, 16, vol, sod=50.0,
+                                sdd=100.0),
+    }
+
+
+# -- construction / validation ---------------------------------------------- #
+def test_spec_validates_eagerly(geom):
+    with pytest.raises(ValueError, match="model"):
+        ProjectorSpec(geom, model="nope")
+    with pytest.raises(ValueError, match="backend"):
+        ProjectorSpec(geom, backend="gpu")
+    with pytest.raises(ValueError, match="mode"):
+        ProjectorSpec(geom, mode="lazy")
+    with pytest.raises(ValueError):
+        ProjectorSpec(geom, compute_dtype="float16")
+    with pytest.raises(TypeError, match="KernelConfig"):
+        ProjectorSpec(geom, config={"bu": 8})
+    with pytest.raises(TypeError, match="CTGeometry"):
+        ProjectorSpec("not a geometry")
+
+
+def test_spec_canonicalizes_dtype_aliases(geom):
+    assert ProjectorSpec(geom, compute_dtype="bf16").compute_dtype == "bfloat16"
+    assert (ProjectorSpec(geom, compute_dtype="bf16")
+            == ProjectorSpec(geom, compute_dtype="bfloat16"))
+
+
+# -- content identity -------------------------------------------------------- #
+def test_spec_equality_is_content_based():
+    vol = VolumeGeometry(8, 8, 1)
+    a = ProjectorSpec(parallel_beam(12, 1, 16, vol))
+    b = ProjectorSpec(parallel_beam(12, 1, 16, VolumeGeometry(8, 8, 1)))
+    assert a == b and hash(a) == hash(b)
+    assert a != ProjectorSpec(parallel_beam(12, 1, 16, vol), model="joseph")
+    assert a.bucket_key() == b.bucket_key()
+    assert a.replace(mode="exact") != a
+
+
+def test_spec_hashable_in_sets(geom):
+    s = {ProjectorSpec(geom), ProjectorSpec(geom),
+         ProjectorSpec(geom, model="joseph")}
+    assert len(s) == 2
+
+
+def test_config_participates_in_identity(geom):
+    pinned = ProjectorSpec(geom, config=KernelConfig(bu=8))
+    assert pinned != ProjectorSpec(geom)
+    assert pinned.bucket_key() != ProjectorSpec(geom).bucket_key()
+
+
+# -- stable geometry hashing (the bugfix) ------------------------------------ #
+def test_geometry_hash_float_repr_stable():
+    vol = VolumeGeometry(8, 8, 1)
+    a = fan_beam(12, 1, 16, vol, sod=50.0, sdd=100.0)
+    b = fan_beam(12, 1, 16, vol, sod=np.float32(50.0), sdd=np.float64(100.0))
+    assert a.canonical_hash() == b.canonical_hash()
+    assert a.key() == b.key()
+
+
+@pytest.mark.parametrize("kind", ["parallel", "fan", "cone", "modular",
+                                  "helical"])
+def test_to_config_roundtrip_hash(kind):
+    g = _geoms()[kind]
+    g2 = from_config(g.to_config())
+    assert g2.canonical_hash() == g.canonical_hash()
+    assert ProjectorSpec(g) == ProjectorSpec(g2)
+
+
+def test_modular_frames_hashed_by_content():
+    g = _geoms()["modular"]
+    cfg = g.to_config()
+    g2 = from_config(cfg)
+    assert g2.canonical_hash() == g.canonical_hash()
+    cfg_moved = dict(cfg)
+    src = np.asarray(cfg["source_pos"], float).copy()
+    src[0, 0] += 1.0
+    cfg_moved["source_pos"] = src.tolist()
+    assert from_config(cfg_moved).canonical_hash() != g.canonical_hash()
+
+
+# -- op-cache key unification ------------------------------------------------ #
+def test_spec_and_legacy_share_op_cache(geom):
+    ops.clear_cache()
+    spec = ProjectorSpec(geom)
+    fp_spec, bp_spec = ops.get_ops(spec)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        fp_legacy, bp_legacy = ops.get_ops(geom)
+    assert fp_spec is fp_legacy and bp_spec is bp_legacy
+    assert ops.cache_stats()["size"] == 1
+
+
+def test_equal_specs_share_cached_bundle(geom):
+    ops.clear_cache()
+    f = jnp.ones(geom.vol.shape)
+    a = ops.forward_project(f, ProjectorSpec(geom))
+    size1 = ops.cache_stats()["size"]
+    b = ops.forward_project(f, ProjectorSpec(
+        parallel_beam(12, 1, 16, VolumeGeometry(8, 8, 1))))
+    assert ops.cache_stats()["size"] == size1
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+# -- legacy shims ------------------------------------------------------------ #
+def test_legacy_kwargs_warn_exactly_once(geom):
+    reset_legacy_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        p1 = Projector(geom, model="sf")
+        p2 = Projector(geom, model="joseph")
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "ProjectorSpec" in str(dep[0].message)
+    # distinct entry points warn independently, still once each
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ops.forward_project(jnp.ones(geom.vol.shape), geom)
+        ops.forward_project(jnp.ones(geom.vol.shape), geom)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert p1.spec.model == "sf" and p2.spec.model == "joseph"
+
+
+def test_legacy_behavior_preserved(geom):
+    f = jnp.ones(geom.vol.shape)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = Projector(geom, "sf", mode="exact")
+        y_fn = ops.forward_project(f, geom, mode="exact")
+    spec = ProjectorSpec(geom, model="sf", mode="exact")
+    modern = Projector(spec)
+    assert legacy.spec == spec
+    np.testing.assert_allclose(np.asarray(legacy(f)), np.asarray(modern(f)),
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(y_fn), np.asarray(modern(f)),
+                               rtol=0, atol=0)
+
+
+def test_spec_plus_kwargs_is_an_error(geom):
+    spec = ProjectorSpec(geom)
+    with pytest.raises(TypeError, match="not both"):
+        Projector(spec, model="joseph")
+    with pytest.raises(TypeError, match="not both"):
+        as_spec(spec, "get_ops", mode="packed")
+    with pytest.raises(TypeError, match="ProjectorSpec or CTGeometry"):
+        as_spec(42, "get_ops")
+
+
+def test_projector_backcompat_attributes(geom):
+    proj = Projector(ProjectorSpec(geom, compute_dtype="bf16"))
+    assert proj.geom is geom
+    assert proj.model == "sf" and proj.backend == "auto"
+    assert proj.mode == "auto" and proj.compute_dtype == "bfloat16"
+    assert proj.config is None
