@@ -31,6 +31,11 @@ the iterative ``quality`` tier, TPU-only (advisory on CPU) for the
 single-shot ``interactive`` tier.  Serve rows normalize by their own tier's
 serial row, so the baseline comparison stays machine-portable for them too.
 
+Distributed weak-scaling rows (``dist/<op>/ws<n>`` from
+``bench_distributed``) normalize by the same op's ``ws1`` row, gating the
+scaling *shape* (see DIST_GATE below); they are only compared when the
+fresh CSV ran the suite (it needs 8 visible devices).
+
 Usage:
     PYTHONPATH=src python -m benchmarks.run --only kernels > fresh.csv
     python -m benchmarks.check_regression fresh.csv              # gate
@@ -85,6 +90,14 @@ SERVE_GATE = re.compile(r"^serve/")
 SERVE_ROW = re.compile(r"^serve/(?P<tier>[^/]+)/(?P<kind>[^/]+)$")
 SERVE_MIN_SPEEDUP = 4.0
 SERVE_CPU_GATED_TIERS = ("quality",)
+# Distributed weak-scaling rows (``dist/<op>/ws<n>`` from bench_distributed):
+# every row normalizes by the same op's single-shard ``ws1`` row from the
+# same run, so the committed baseline gates the *scaling shape* (ws8
+# drifting up vs ws1 = broken comm overlap or a serialized mesh) and stays
+# machine-portable — absolute mesh speed varies wildly between a CPU forcing
+# 8 host devices onto one core and a real pod.
+DIST_GATE = re.compile(r"^dist/")
+DIST_ROW = re.compile(r"^dist/(?P<op>[^/]+)/ws(?P<n>\d+)$")
 
 
 def parse_csv(path: str) -> Dict[str, Tuple[float, str]]:
@@ -108,8 +121,11 @@ def parse_csv(path: str) -> Dict[str, Tuple[float, str]]:
 def _norm(fresh: Dict[str, Tuple[float, str]], name: str) -> float:
     us, derived = fresh[name]
     m = SERVE_ROW.match(name)
+    d = DIST_ROW.match(name)
     if m:
         cal = f"serve/{m.group('tier')}/serial_us_per_recon"
+    elif d:
+        cal = f"dist/{d.group('op')}/ws1"
     else:
         cal = CAL_JIT if derived.startswith("cpu-jit") else CAL_PALLAS
     return us / fresh[cal][0]
@@ -182,7 +198,8 @@ def write_baseline(runs: List[Dict[str, Tuple[float, str]]],
     names = sorted(set().union(*[set(r) for r in runs]))
     entries = {}
     for name in names:
-        if not (GATE.match(name) or SERVE_GATE.match(name)):
+        if not (GATE.match(name) or SERVE_GATE.match(name)
+                or DIST_GATE.match(name)):
             continue
         present = [r for r in runs if name in r]
         entries[name] = {
@@ -232,6 +249,11 @@ def main() -> int:
             if cal not in run:
                 print(f"FAIL: calibration row {cal!r} missing from {path}")
                 return 1
+        for op in {d.group("op") for d in map(DIST_ROW.match, run) if d}:
+            cal = f"dist/{op}/ws1"
+            if cal not in run:
+                print(f"FAIL: calibration row {cal!r} missing from {path}")
+                return 1
     if args.write_baseline:
         write_baseline(runs, pathlib.Path(args.baseline))
         return 0
@@ -244,10 +266,13 @@ def main() -> int:
     # CI merges the kernels + serve CSVs so drift in either still fails.
     has_kernel = any(GATE.match(n) for n in fresh)
     has_serve = any(SERVE_GATE.match(n) for n in fresh)
+    has_dist = any(DIST_GATE.match(n) for n in fresh)
     for name, entry in baseline.items():
         if GATE.match(name) and not has_kernel:
             continue
         if SERVE_GATE.match(name) and not has_serve:
+            continue
+        if DIST_GATE.match(name) and not has_dist:
             continue
         if name not in fresh:
             fails.append(f"{name}: missing from fresh run (API drift?)")
@@ -263,7 +288,7 @@ def main() -> int:
         elif ratio > WARN_RATIO or (ratio > FAIL_RATIO and tiny):
             warns.append(line)
     for name in sorted(set(fresh) - set(baseline)):
-        if GATE.match(name) or SERVE_GATE.match(name):
+        if GATE.match(name) or SERVE_GATE.match(name) or DIST_GATE.match(name):
             warns.append(f"{name}: new row not in baseline "
                          f"(regenerate with --write-baseline)")
 

@@ -15,8 +15,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_archs, bench_data_consistency,
-                            bench_kernels, bench_projectors, bench_recon,
-                            bench_serve)
+                            bench_distributed, bench_kernels,
+                            bench_projectors, bench_recon, bench_serve)
     suites = {
         "table1_projectors": bench_projectors.run,
         "recon_pipeline": bench_recon.run,
@@ -24,6 +24,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "archs": bench_archs.run,
         "serve": bench_serve.run,
+        "distributed": bench_distributed.run,
     }
     print("name,us_per_call,derived", flush=True)
     for name, fn in suites.items():

@@ -12,12 +12,13 @@ inside `repro.kernels` (the kernels register themselves with ops at import).
 from repro.core.geometry import (CTGeometry, VolumeGeometry, cone_beam,
                                  fan_beam, from_config, helical_beam,
                                  modular_beam, parallel_beam)
-from repro.core.spec import ProjectorSpec
+from repro.core.spec import ProjectorSpec, ShardSpec
 
 __all__ = [
     "CTGeometry", "VolumeGeometry", "parallel_beam", "fan_beam", "cone_beam",
     "modular_beam", "helical_beam", "from_config", "Projector",
-    "ProjectorSpec", "forward_project", "back_project", "fbp",
+    "ProjectorSpec", "ShardSpec", "DistributedProjector", "distribute",
+    "forward_project", "back_project", "fbp",
 ]
 
 # fbp has no import cycle with kernels and must be bound eagerly: once the
@@ -26,6 +27,9 @@ __all__ = [
 from repro.core.fbp import fbp  # noqa: E402
 
 _LAZY = {"Projector": ("repro.core.projector", "Projector"),
+         "DistributedProjector": ("repro.core.distributed",
+                                  "DistributedProjector"),
+         "distribute": ("repro.core.distributed", "distribute"),
          "forward_project": ("repro.kernels.ops", "forward_project"),
          "back_project": ("repro.kernels.ops", "back_project")}
 

@@ -254,6 +254,12 @@ _CACHE_MISSES = 0
 
 def _get_bundle(spec: ProjectorSpec, in_dtype=None) -> Ops:
     global _CACHE_HITS, _CACHE_MISSES
+    if spec.shard is not None:
+        raise ValueError(
+            "spec carries a ShardSpec — the local op cache cannot realize "
+            "a sharded layout; build DistributedProjector(spec, mesh) "
+            "(repro.core.distributed), or drop the shard with "
+            "spec.replace(shard=None) for single-device ops")
     geom = spec.geom
     use_pallas = _use_pallas(geom, spec.model, spec.backend)
     rmode = _resolve_mode(geom, spec.model, spec.mode, use_pallas)

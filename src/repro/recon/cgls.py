@@ -5,12 +5,15 @@ forward projector; with unmatched pairs CG diverges (Zeng & Gullberg 2000) —
 this is exactly the paper's argument for matched pairs.  Supports Tikhonov
 damping: min ||Ax - y||^2 + damp ||x||^2.
 
-Accepts a ``ProjectorSpec`` or a ``Projector``.  Leading batch dims on ``y``
-run independent CG iterations side by side: every inner product reduces over
-the trailing image/sinogram axes only (keepdims, so the per-sample step
-sizes broadcast), which keeps a packed serving batch mathematically
-identical to solving each request alone.  Returns a
-:class:`~repro.recon.result.ReconResult`.
+Accepts a ``ProjectorSpec``, a ``Projector`` or a
+:class:`~repro.core.distributed.DistributedProjector`.  Leading batch dims
+on ``y`` run independent CG iterations side by side: every inner product
+reduces over the trailing image/sinogram axes only (keepdims, so the
+per-sample step sizes broadcast), which keeps a packed serving batch
+mathematically identical to solving each request alone.  The same
+reductions stay correct under a distributed projector — they run on global
+(sharded) arrays, so the CG scalars are mesh-wide inner products, exactly
+as CG requires.  Returns a :class:`~repro.recon.result.ReconResult`.
 """
 from __future__ import annotations
 

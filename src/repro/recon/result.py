@@ -58,15 +58,27 @@ def _unflatten(iterations, children):
 jax.tree_util.register_pytree_node(ReconResult, _flatten, _unflatten)
 
 
-def as_projector(spec_or_projector) -> Projector:
-    """Coerce a solver's operator argument to a :class:`Projector`.
+def as_projector(spec_or_projector):
+    """Coerce a solver's operator argument to a projector object.
 
     Specs are the canonical currency (hashable, bucketable); a prebuilt
-    Projector passes through so repeated solves reuse its spec."""
-    if isinstance(spec_or_projector, Projector):
+    :class:`Projector` passes through so repeated solves reuse its spec.
+    A :class:`~repro.core.distributed.DistributedProjector` also passes
+    through (it quacks the same: ``geom``/``__call__``/``T``), and a spec
+    carrying a :class:`~repro.core.spec.ShardSpec` is realized on the mesh
+    of its devices — so the iterative solvers run distributed without
+    solver forks."""
+    from repro.core.distributed import DistributedProjector
+    if isinstance(spec_or_projector, (Projector, DistributedProjector)):
         return spec_or_projector
     if isinstance(spec_or_projector, ProjectorSpec):
+        if spec_or_projector.shard is not None:
+            raise ValueError(
+                "this ProjectorSpec carries a ShardSpec, which needs a "
+                "device mesh to realize — build "
+                "DistributedProjector(spec, mesh) and pass that to the "
+                "solver instead")
         return Projector(spec_or_projector)
     raise TypeError(
-        f"expected a ProjectorSpec or Projector, "
+        f"expected a ProjectorSpec, Projector or DistributedProjector, "
         f"got {type(spec_or_projector).__name__}")

@@ -7,10 +7,15 @@ constant images (the paper's memory-footprint point: the system matrix is
 never materialized).  Relies on the *matched* A/A^T pair for convergence
 stability over 1000+ iterations (paper §2.1).
 
-Accepts a ``ProjectorSpec`` or a ``Projector``; leading batch dims on ``y``
-are reconstructed jointly (every update is elementwise or routed through the
-batch-aware projector), which is what the serving layer packs onto the lane
-axis.  Returns a :class:`~repro.recon.result.ReconResult`.
+Accepts a ``ProjectorSpec``, a ``Projector`` or a
+:class:`~repro.core.distributed.DistributedProjector`; leading batch dims on
+``y`` are reconstructed jointly (every update is elementwise or routed
+through the batch-aware projector), which is what the serving layer packs
+onto the lane axis.  Under a distributed projector the loop runs unbatched
+on the mesh: the per-sample residual reductions are over *global* (sharded)
+sinogram axes, so XLA inserts the cross-shard reduction and the history
+matches the single-device run.  Returns a
+:class:`~repro.recon.result.ReconResult`.
 """
 from __future__ import annotations
 

@@ -9,7 +9,7 @@ import pytest
 from repro.core import (Projector, ProjectorSpec, VolumeGeometry, cone_beam,
                         fan_beam, from_config, helical_beam, modular_beam,
                         parallel_beam)
-from repro.core.spec import as_spec, reset_legacy_warnings
+from repro.core.spec import ShardSpec, as_spec, reset_legacy_warnings
 from repro.kernels import ops
 from repro.kernels.tune import KernelConfig
 
@@ -187,3 +187,59 @@ def test_projector_backcompat_attributes(geom):
     assert proj.model == "sf" and proj.backend == "auto"
     assert proj.mode == "auto" and proj.compute_dtype == "bfloat16"
     assert proj.config is None
+
+
+# -- ShardSpec ---------------------------------------------------------------- #
+def test_shard_spec_validation():
+    with pytest.raises(ValueError, match="mesh_axes"):
+        ShardSpec(mesh_axes=("data",))
+    with pytest.raises(ValueError, match="angle axis"):
+        ShardSpec(mesh_axes=(None, "model"))
+    with pytest.raises(ValueError, match="distinct"):
+        ShardSpec(mesh_axes=("data", "data"))
+    with pytest.raises(ValueError, match=">= 1"):
+        ShardSpec(angle_shards=0)
+    with pytest.raises(ValueError, match="z mesh axis"):
+        ShardSpec(mesh_axes=("data", None), z_shards=2)
+    with pytest.raises(ValueError, match="halo"):
+        ShardSpec(halo=-1)
+    with pytest.raises(ValueError, match="meaningless"):
+        ShardSpec(z_shards=1, halo=2)
+    with pytest.raises(ValueError, match="comm"):
+        ShardSpec(comm="ring")
+    with pytest.raises(ValueError, match="comm_blocks"):
+        ShardSpec(comm_blocks=-1)
+
+
+def test_shard_spec_hash_roundtrip():
+    a = ShardSpec(("data", "model"), angle_shards=4, z_shards=2, halo=3)
+    b = ShardSpec(("data", "model"), angle_shards=4, z_shards=2, halo=3)
+    assert a == b and hash(a) == hash(b)
+    assert a.replace(halo=2) != a
+    assert a.angle_axis == "data" and a.z_axis == "model"
+    # round-trips through its own field dict (config-file currency)
+    import dataclasses
+    c = ShardSpec(**dataclasses.asdict(a))
+    assert c == a and hash(c) == hash(a)
+    assert len({a, b, a.replace(comm="psum")}) == 2
+
+
+def test_shard_participates_in_spec_identity(geom):
+    shard = ShardSpec(("data", "model"), angle_shards=2, z_shards=2, halo=1)
+    plain = ProjectorSpec(geom)
+    sharded = ProjectorSpec(geom, shard=shard)
+    assert plain != sharded and hash(plain) != hash(sharded)
+    assert plain.bucket_key() != sharded.bucket_key()
+    assert plain.cache_key() != sharded.cache_key()
+    # same layout content -> same identity, regardless of object
+    again = ProjectorSpec(geom, shard=ShardSpec(("data", "model"),
+                                                angle_shards=2, z_shards=2,
+                                                halo=1))
+    assert sharded == again and hash(sharded) == hash(again)
+    assert sharded.bucket_key() == again.bucket_key()
+    # different layouts must not share serving buckets or cache entries
+    other = ProjectorSpec(geom, shard=shard.replace(comm="psum"))
+    assert other != sharded and other.bucket_key() != sharded.bucket_key()
+    with pytest.raises(TypeError, match="ShardSpec"):
+        ProjectorSpec(geom, shard="angle")
+    assert "shard=" in repr(sharded)
