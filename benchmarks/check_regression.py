@@ -100,6 +100,18 @@ DIST_GATE = re.compile(r"^dist/")
 DIST_ROW = re.compile(r"^dist/(?P<op>[^/]+)/ws(?P<n>\d+)$")
 
 
+def expected_rows(prefixes: Tuple[str, ...] = (),
+                  baseline_path: pathlib.Path = BASELINE) -> List[str]:
+    """The gated row names from the committed baseline — the single source
+    of truth for "which bench rows must exist".  CI's smoke jobs and the
+    repro-lint RL007 pass both consume this instead of keeping their own
+    hand-maintained row lists."""
+    rows = sorted(json.loads(pathlib.Path(baseline_path).read_text())["rows"])
+    if prefixes:
+        rows = [r for r in rows if any(r.startswith(p) for p in prefixes)]
+    return rows
+
+
 def parse_csv(path: str) -> Dict[str, Tuple[float, str]]:
     """``name,us_per_call,derived`` rows (the benchmarks.run contract) as
     ``{name: (us, derived)}``; error sentinels (us < 0) are dropped so they
@@ -225,13 +237,28 @@ def write_baseline(runs: List[Dict[str, Tuple[float, str]]],
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("csv", nargs="+",
+    ap.add_argument("csv", nargs="*",
                     help="fresh bench_kernels CSV(s); the gate checks the "
-                         "first, --write-baseline medians across all")
+                         "first, --write-baseline medians across all.  With "
+                         "--list-expected-rows these are row-name prefixes "
+                         "(e.g. 'kernel/' 'serve/') instead")
     ap.add_argument("--baseline", default=str(BASELINE))
     ap.add_argument("--write-baseline", action="store_true",
                     help="regenerate the baseline from the CSV(s) instead")
+    ap.add_argument("--list-expected-rows", action="store_true",
+                    help="print the gated baseline row names (one per line, "
+                         "optionally filtered by prefix args) and exit — "
+                         "machine-readable source for CI smoke checks and "
+                         "repro-lint RL007")
     args = ap.parse_args()
+
+    if args.list_expected_rows:
+        for row in expected_rows(tuple(args.csv),
+                                 pathlib.Path(args.baseline)):
+            print(row)
+        return 0
+    if not args.csv:
+        ap.error("at least one CSV is required unless --list-expected-rows")
 
     runs = [parse_csv(p) for p in args.csv]
     for path, run in zip(args.csv, runs):

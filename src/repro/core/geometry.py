@@ -428,7 +428,11 @@ def helical_beam(n_turns: float, pitch: float, n_angles: int,
 def cone_as_modular(g: CTGeometry) -> CTGeometry:
     """Re-express an axial cone-beam geometry in modular form (for testing the
     modular path against the cone path)."""
-    assert g.geom_type == "cone" and g.detector_type == "flat"
+    if g.geom_type != "cone" or g.detector_type != "flat":
+        raise ValueError(
+            f"cone_as_modular needs a flat-detector cone geometry, got "
+            f"geom_type={g.geom_type!r} detector_type="
+            f"{getattr(g, 'detector_type', None)!r}")
     ang = np.asarray(g.angles)
     c, s = np.cos(ang), np.sin(ang)
     src = np.stack([g.sod * c, g.sod * s, np.zeros_like(c)], -1)

@@ -54,7 +54,10 @@ class CTDataPipeline:
                  mode: str = "limited_angle", available_deg: float = 60.0,
                  n_views_few: int = 32, shard_index: int = 0,
                  shard_count: int = 1, start_step: int = 0):
-        assert batch_size % shard_count == 0
+        if batch_size % shard_count:
+            raise ValueError(f"batch_size={batch_size} must be divisible by "
+                             f"shard_count={shard_count} so every data shard "
+                             f"gets an equal local batch")
         self.geom = geom
         self.global_batch = batch_size
         self.local_batch = batch_size // shard_count
@@ -114,5 +117,9 @@ class CTDataPipeline:
         return {"seed": self.seed, "step": self.step}
 
     def load_state_dict(self, d: dict):
-        assert d["seed"] == self.seed, "data seed mismatch on restore"
+        if d["seed"] != self.seed:
+            raise ValueError(f"data seed mismatch on restore: checkpoint has "
+                             f"seed={d['seed']}, pipeline was built with "
+                             f"seed={self.seed}; restoring would silently "
+                             f"replay a different data stream")
         self.step = int(d["step"])

@@ -12,7 +12,10 @@ class TokenPipeline:
     def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
                  seed: int = 0, shard_index: int = 0, shard_count: int = 1,
                  start_step: int = 0):
-        assert global_batch % shard_count == 0
+        if global_batch % shard_count:
+            raise ValueError(f"global_batch={global_batch} must be divisible "
+                             f"by shard_count={shard_count} so every data "
+                             f"shard gets an equal local batch")
         self.vocab_size = vocab_size
         self.seq_len = seq_len
         self.local_batch = global_batch // shard_count

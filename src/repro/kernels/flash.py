@@ -108,7 +108,11 @@ def flash_attention(q, k, v, window: Optional[int] = None,
     G = H // KV
     bq = min(bq, S)
     bk = min(bk, S)
-    assert S % bq == 0 and S % bk == 0
+    if S % bq or S % bk:
+        raise ValueError(
+            f"flash_attention needs the sequence length to be divisible by "
+            f"both block sizes, got S={S} with bq={bq}, bk={bk}; pad the "
+            f"sequence or pass block sizes that divide it")
     nq, nk = S // bq, S // bk
     scale = 1.0 / math.sqrt(hd)
     qg = q.reshape(B, KV, G, S, hd)

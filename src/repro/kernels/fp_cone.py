@@ -311,7 +311,12 @@ def fp_cone_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
                       compute_dtype=None):
     """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or batched
     f: (batch, nx, ny, nz) -> (batch, ...).  Flat detector."""
-    assert geom.geom_type == "cone" and geom.detector_type == "flat"
+    if geom.geom_type != "cone" or geom.detector_type != "flat":
+        raise ValueError(
+            f"fp_cone_sf_pallas needs a flat-detector cone geometry, got "
+            f"geom_type={geom.geom_type!r} detector_type="
+            f"{getattr(geom, 'detector_type', None)!r}; curved-detector "
+            f"cone runs through the ref backend")
     if f.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
     batched = f.ndim == 4
@@ -484,7 +489,12 @@ def bp_cone_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
     corner-projection trapezoid via the transposed contraction, and the
     per-element axial rect-overlap matvec applied in the adjoint direction
     (detector rows -> volume z lanes)."""
-    assert geom.geom_type == "cone" and geom.detector_type == "flat"
+    if geom.geom_type != "cone" or geom.detector_type != "flat":
+        raise ValueError(
+            f"bp_cone_sf_pallas needs a flat-detector cone geometry, got "
+            f"geom_type={geom.geom_type!r} detector_type="
+            f"{getattr(geom, 'detector_type', None)!r}; curved-detector "
+            f"cone runs through the ref backend")
     if sino.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
     batched = sino.ndim == 4

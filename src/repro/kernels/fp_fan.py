@@ -156,7 +156,10 @@ def _run_fp_group(g, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
                   bu: int, bv: int, ba: int = 1):
     """g: (nx, ny, NVp) volume with the lane axis already padded to a bv
     multiple (NVp lanes = packed batch * n_rows)."""
-    assert params.shape[0] > 0
+    if params.shape[0] == 0:
+        raise ValueError(
+            "empty view group reached the fan Pallas kernel; callers "
+            "(_fp_core/_bp_core) must skip groups with no views")
     if not gathered_x:
         g = jnp.swapaxes(g, 0, 1)
     ng, nl, nvp = g.shape
@@ -213,7 +216,10 @@ def fp_fan_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
     batched f: (batch, nx, ny, nz) -> (batch, n_angles, n_rows, n_cols).
     ``compute_dtype`` selects the tile dtype at the VMEM boundary (None =
     follow ``f.dtype``); accumulation stays f32, output is ``f.dtype``."""
-    assert geom.geom_type == "fan"
+    if geom.geom_type != "fan":
+        raise ValueError(f"fp_fan_sf_pallas needs a fan geometry, got "
+                         f"geom_type={geom.geom_type!r}; dispatch through "
+                         f"get_ops/forward_project for auto kernel selection")
     if f.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D volume, got {f.shape}")
     batch = f.shape[0] if f.ndim == 4 else 1
@@ -364,7 +370,10 @@ def bp_fan_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
     Exact transpose of ``fp_fan_sf_pallas`` (incl. the batched path).
     ``compute_dtype`` selects the stripe dtype at the VMEM boundary; ``bs``
     overrides the stripe-reuse blocking factor."""
-    assert geom.geom_type == "fan"
+    if geom.geom_type != "fan":
+        raise ValueError(f"bp_fan_sf_pallas needs a fan geometry, got "
+                         f"geom_type={geom.geom_type!r}; dispatch through "
+                         f"get_ops/back_project for auto kernel selection")
     if sino.ndim not in (3, 4):
         raise ValueError(f"expected 3D or batched 4D sinogram, got {sino.shape}")
     batch = sino.shape[0] if sino.ndim == 4 else 1

@@ -81,7 +81,9 @@ def _frames(geom: CTGeometry):
     in-plane detector axis ``eu``, in-plane unit normal ``n`` oriented
     source -> detector, detector distance ``sdd`` along ``n``, in-plane /
     axial detector offsets ``cu``/``cv``, and the e_v z-sign ``evz``."""
-    assert geom.geom_type == "modular"
+    if geom.geom_type != "modular":
+        raise ValueError(f"_frames needs a modular geometry, got "
+                         f"geom_type={geom.geom_type!r}")
     s = np.asarray(geom.source_pos, np.float64)
     c = np.asarray(geom.det_center, np.float64)
     eu = np.asarray(geom.det_u, np.float64)
@@ -366,7 +368,11 @@ def fp_modular_sf_pallas(f, geom: CTGeometry, bu: Optional[int] = None,
                          compute_dtype=None):
     """f: (nx, ny, nz) -> sino (n_angles, n_rows, n_cols), or batched
     f: (batch, nx, ny, nz) -> (batch, ...).  Axial modular frames."""
-    assert geom.geom_type == "modular"
+    if geom.geom_type != "modular":
+        raise ValueError(f"fp_modular_sf_pallas needs a modular geometry, "
+                         f"got geom_type={geom.geom_type!r}; dispatch "
+                         f"through get_ops/forward_project for auto kernel "
+                         f"selection")
     fr = _frames(geom)
     _require_axial(geom, fr)
     if f.ndim not in (3, 4):
@@ -543,7 +549,11 @@ def bp_modular_sf_pallas(sino, geom: CTGeometry, bg: Optional[int] = None,
     """sino: (n_angles, n_rows, n_cols) -> volume (nx, ny, nz), or batched
     sino: (batch, ...) -> (batch, nx, ny, nz).  Exact transpose of
     ``fp_modular_sf_pallas`` (incl. the batched path)."""
-    assert geom.geom_type == "modular"
+    if geom.geom_type != "modular":
+        raise ValueError(f"bp_modular_sf_pallas needs a modular geometry, "
+                         f"got geom_type={geom.geom_type!r}; dispatch "
+                         f"through get_ops/back_project for auto kernel "
+                         f"selection")
     fr = _frames(geom)
     _require_axial(geom, fr)
     if sino.ndim not in (3, 4):

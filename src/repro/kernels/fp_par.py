@@ -175,7 +175,10 @@ def _run_fp_group(g, params: np.ndarray, geom: CTGeometry, gathered_x: bool,
     """g: (nx, ny, NVp) volume with the lane axis already padded to a bv
     multiple (NVp lanes = packed batch * n_rows).  Callers guard against
     empty view groups."""
-    assert params.shape[0] > 0
+    if params.shape[0] == 0:
+        raise ValueError(
+            "empty view group reached the parallel Pallas kernel; callers "
+            "(_fp_core/_bp_core) must skip groups with no views")
     if not gathered_x:
         g = jnp.swapaxes(g, 0, 1)
     ng, nl, nvp = g.shape

@@ -22,6 +22,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.launch.mesh import data_axes
 from repro.models.config import ModelConfig
 
@@ -108,11 +109,11 @@ def param_shardings(cfg: ModelConfig, abstract_params, mesh: Mesh,
                         break
             return NamedSharding(mesh, P(*spec))
 
-        return jax.tree_util.tree_map_with_path(g, abstract_params)
+        return compat.tree_map_with_path(g, abstract_params)
 
     def f(path, leaf):
         return NamedSharding(mesh, param_pspec(path, leaf.shape, mesh, fsdp))
-    return jax.tree_util.tree_map_with_path(f, abstract_params)
+    return compat.tree_map_with_path(f, abstract_params)
 
 
 # ----------------------------- activations -------------------------------- #

@@ -1,0 +1,35 @@
+"""repro-lint: AST-level invariant checker for the kernel-suite contracts.
+
+Every PR in this repo has added cross-file invariants that plain unit tests
+cannot see breaking until a refactor lands on TPU hardware or a jax upgrade
+hits CI: the f32-accumulator policy inside Pallas kernels, the
+``repro.compat`` drift firewall, the content-stable hashing rules behind the
+serving cache, the CTServer warm-path compile guarantee, the matched
+FP/BP/oracle registry, and the benchmark-gate row inventory.  ``repro.lint``
+turns each of those into a named, explainable, suppressible rule:
+
+    RL001  f32 accumulator policy in ``kernels/fp_*.py``
+    RL002  no bare ``assert`` in library code
+    RL003  version-drift jax APIs only via ``repro.compat``
+    RL004  hash-unstable constructs in spec/geometry identity paths
+    RL005  no compile triggers on the CTServer request path
+    RL006  kernel registry completeness (BP + oracle + tune + adjoint test)
+    RL007  benchmark rows vs ``baseline.json`` / ci.yml consistency
+
+Usage::
+
+    PYTHONPATH=src python -m repro.lint src tests benchmarks
+    PYTHONPATH=src python -m repro.lint --explain RL004
+
+Suppress a single diagnostic with a same-line pragma (justify it next to
+the code)::
+
+    some_violation()   # repro-lint: disable=RL004
+
+Implementation is stdlib-``ast`` only (plus one deliberate import of the
+live kernel registry for RL006 — a registry can only be introspected, not
+parsed).  See ``docs/INVARIANTS.md`` for the contract behind each rule.
+"""
+from repro.lint.engine import Diagnostic, Project, collect, run_rules
+
+__all__ = ["Diagnostic", "Project", "collect", "run_rules"]

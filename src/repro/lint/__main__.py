@@ -1,0 +1,80 @@
+"""CLI: ``python -m repro.lint [paths...] [--explain RL00x] [--select ...]``.
+
+Exit codes: 0 clean, 1 violations found, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.lint.engine import collect, run_rules
+from repro.lint.rules import ALL_RULES, by_code
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="repro-lint: AST-level invariant checker for the "
+                    "kernel-suite contracts (RL001-RL007)")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to lint "
+                         "(typically: src tests benchmarks)")
+    ap.add_argument("--explain", metavar="CODE",
+                    help="print the contract behind a rule code and exit")
+    ap.add_argument("--select", metavar="CODES",
+                    help="comma-separated rule codes to run "
+                         "(default: all)")
+    ap.add_argument("--root", default=".",
+                    help="repo root for the project-level rules "
+                         "(registry/bench-rows); default: cwd")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        rule = by_code(args.explain)
+        if rule is None:
+            codes = ", ".join(r.CODE for r in ALL_RULES)
+            print(f"unknown rule {args.explain!r}; known: {codes}",
+                  file=sys.stderr)
+            return 2
+        print(rule.EXPLAIN, end="")
+        return 0
+
+    if not args.paths:
+        ap.error("no paths given (try: python -m repro.lint src tests "
+                 "benchmarks)")
+
+    select = None
+    if args.select:
+        select = {c.strip().upper() for c in args.select.split(",")
+                  if c.strip()}
+        unknown = select - {r.CODE for r in ALL_RULES}
+        if unknown:
+            ap.error(f"unknown rule code(s): {', '.join(sorted(unknown))}")
+
+    root = pathlib.Path(args.root).resolve()
+    src = root / "src"
+    if src.is_dir() and str(src) not in sys.path:
+        sys.path.insert(0, str(src))
+    try:
+        project = collect(args.paths, root)
+    except FileNotFoundError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+
+    diags = run_rules(project, ALL_RULES, select)
+    for d in diags:
+        print(d.format())
+    if diags:
+        codes = sorted({d.code for d in diags})
+        print(f"repro-lint: {len(diags)} violation(s) "
+              f"[{', '.join(codes)}] in {len(project.files)} file(s) — "
+              f"`python -m repro.lint --explain <code>` for the contract")
+        return 1
+    print(f"repro-lint: OK ({len(project.files)} files, "
+          f"{len(ALL_RULES) if not select else len(select)} rules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,70 @@
+"""Shared AST helpers: import-alias resolution for dotted names.
+
+The rules need to answer "is this call ``jax.lax.dot_general``?" robustly
+against the repo's import idioms (``import jax.numpy as jnp``,
+``from jax.experimental import pallas as pl``, ``from repro import
+compat``).  ``ImportMap`` records every alias a module introduces;
+``resolve`` expands an ``ast.Name``/``ast.Attribute`` chain through it to a
+canonical dotted path.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional
+
+
+class ImportMap:
+    """Alias -> canonical dotted prefix, built from a module's imports."""
+
+    def __init__(self, tree: ast.AST):
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    # "import jax.numpy as jnp" -> jnp: jax.numpy
+                    # "import jax.numpy"        -> jax: jax (root binding)
+                    if a.asname:
+                        self.aliases[a.asname] = a.name
+                    else:
+                        root = a.name.split(".")[0]
+                        self.aliases.setdefault(root, root)
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    bound = a.asname or a.name
+                    self.aliases[bound] = f"{node.module}.{a.name}"
+
+
+def literal_chain(node: ast.AST) -> Optional[str]:
+    """The attribute chain exactly as written ('pl.pallas_call'), or None
+    for anything that is not a pure Name/Attribute chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def resolve(node: ast.AST, imports: ImportMap) -> Optional[str]:
+    """Alias-expanded dotted name ('jax.experimental.pallas.pallas_call'),
+    or the literal chain when the root is not an import alias (locals)."""
+    chain = literal_chain(node)
+    if chain is None:
+        return None
+    root, _, rest = chain.partition(".")
+    base = imports.aliases.get(root)
+    if base is None:
+        return chain
+    return f"{base}.{rest}" if rest else base
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None

@@ -1,0 +1,149 @@
+"""Lint engine: file collection, pragma suppression, rule runner.
+
+Design notes:
+
+* Files are parsed once into ``SourceFile`` objects shared by every rule;
+  a syntax error becomes an ``RL000`` diagnostic instead of a crash (a file
+  the linter cannot parse is a file CI cannot trust).
+* Suppression is tokenizer-based, not regex-over-lines, so a pragma inside
+  a string literal does not suppress anything.  A pragma applies to the
+  physical line it sits on — put it on the line the diagnostic points at::
+
+      risky()   # repro-lint: disable=RL004  <why this one is safe>
+
+* Rules are plain modules exposing ``CODE``, ``NAME``, ``EXPLAIN`` and
+  ``check(project) -> list[Diagnostic]``; per-file scoping lives inside
+  each rule so the engine stays policy-free.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+PRAGMA = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    code: str
+    path: str        # display path (repo-relative when run from the root)
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _suppressions(text: str) -> Dict[int, Set[str]]:
+    """{physical line -> set of suppressed codes (lower-cased; 'all' ok)}."""
+    out: Dict[int, Set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = PRAGMA.search(tok.string)
+            if not m:
+                continue
+            codes = {c.strip().lower() for c in m.group(1).split(",")
+                     if c.strip()}
+            out.setdefault(tok.start[0], set()).update(codes)
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass  # the parse error is reported separately as RL000
+    return out
+
+
+class SourceFile:
+    """One parsed python file plus its pragma map."""
+
+    def __init__(self, path: pathlib.Path, display: str):
+        self.path = path
+        self.display = display.replace("\\", "/")
+        self.text = path.read_text(encoding="utf-8", errors="replace")
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree = ast.parse(self.text, filename=str(path))
+        except SyntaxError as e:
+            self.parse_error = f"syntax error: {e.msg} (line {e.lineno})"
+        self.suppressed = _suppressions(self.text)
+
+    def is_suppressed(self, code: str, line: int) -> bool:
+        codes = self.suppressed.get(line, ())
+        return code.lower() in codes or "all" in codes
+
+
+class Project:
+    """Everything a rule may look at: the parsed files plus the repo root
+    (project-level rules find benchmarks/ci.yml/the kernel registry under
+    the root and silently skip when it isn't a repo checkout — that is what
+    lets the test fixtures run file-scoped rules in a tmp dir)."""
+
+    def __init__(self, files: Sequence[SourceFile], root: pathlib.Path):
+        self.files = list(files)
+        self.root = root
+
+    def by_suffix(self, *suffixes: str) -> List[SourceFile]:
+        return [f for f in self.files
+                if any(f.display.endswith(s) for s in suffixes)]
+
+    def matching(self, substring: str) -> List[SourceFile]:
+        return [f for f in self.files if substring in f.display]
+
+
+def _iter_py(path: pathlib.Path) -> Iterable[pathlib.Path]:
+    if path.is_file():
+        if path.suffix == ".py":
+            yield path
+        return
+    for p in sorted(path.rglob("*.py")):
+        parts = p.relative_to(path).parts
+        if any(part == "__pycache__" or part.startswith(".")
+               for part in parts):
+            continue
+        yield p
+
+
+def collect(paths: Sequence[str], root: pathlib.Path) -> Project:
+    files: List[SourceFile] = []
+    seen: Set[pathlib.Path] = set()
+    for raw in paths:
+        base = pathlib.Path(raw)
+        if not base.is_absolute():
+            base = root / base
+        if not base.exists():
+            raise FileNotFoundError(f"lint target does not exist: {raw}")
+        for p in _iter_py(base):
+            rp = p.resolve()
+            if rp in seen:
+                continue
+            seen.add(rp)
+            try:
+                display = str(rp.relative_to(root.resolve()))
+            except ValueError:
+                display = str(p)
+            files.append(SourceFile(p, display))
+    return Project(files, root)
+
+
+def run_rules(project: Project, rules: Sequence,
+              select: Optional[Set[str]] = None) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    for f in project.files:
+        if f.parse_error:
+            diags.append(Diagnostic("RL000", f.display, 1, f.parse_error))
+    by_display = {f.display: f for f in project.files}
+    for rule in rules:
+        if select and rule.CODE not in select:
+            continue
+        for d in rule.check(project):
+            sf = by_display.get(d.path)
+            if sf is not None and sf.is_suppressed(d.code, d.line):
+                continue
+            diags.append(d)
+    return sorted(diags, key=lambda d: (d.path, d.line, d.code))

@@ -1,0 +1,13 @@
+"""Rule registry: one module per RL code."""
+from repro.lint.rules import (accumulator, asserts, benchrows, drift,
+                              hashing, registry, warmpath)
+
+ALL_RULES = (accumulator, asserts, drift, hashing, warmpath, registry,
+             benchrows)
+
+
+def by_code(code: str):
+    for rule in ALL_RULES:
+        if rule.CODE == code.upper():
+            return rule
+    return None

@@ -1,0 +1,112 @@
+"""RL001 — f32 accumulator policy in the forward/back-projection kernels.
+
+Scope: every ``src/repro/kernels/fp_*.py`` file (the matched Pallas FP/BP
+pairs).  ``kernels/flash.py`` is deliberately out of scope: its
+``pallas_call`` out_shapes carry the *input* dtype because its f32
+accumulators live in ``scratch_shapes`` — a different, equally valid
+spelling of the same policy.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.lint.astutil import ImportMap, keyword_arg, resolve
+from repro.lint.engine import Diagnostic, Project
+
+CODE = "RL001"
+NAME = "f32-accumulator"
+EXPLAIN = """\
+RL001 (f32-accumulator): mixed-precision kernels must accumulate in f32.
+
+The bf16 tile policy (PR 6, kernels/precision.py) stores projection inputs
+in bf16 but requires every MXU contraction and every cross-grid-step
+accumulator to be float32, or the adjoint dot-test drifts past tolerance:
+
+  * every jax.lax.dot_general / jnp.dot / pl.dot inside kernels/fp_*.py
+    must pass preferred_element_type=jnp.float32;
+  * every pl.pallas_call out_shape in those files must be a
+    jax.ShapeDtypeStruct with dtype jnp.float32 — the out_ref is the
+    cross-view-group accumulator, so its dtype IS the accumulator dtype.
+
+kernels/flash.py is exempt by scope: its accumulators are f32
+scratch_shapes and its outputs intentionally match the input dtype.
+
+Fix: add preferred_element_type=jnp.float32 to the contraction, or make the
+out_shape dtype jnp.float32 and downcast after the pallas_call returns.
+Suppress (rare — e.g. an intentionally integer-typed index-map output) with
+`# repro-lint: disable=RL001` on the flagged line.
+"""
+
+_DOT_FUNCS = {
+    "jax.lax.dot_general",
+    "jax.lax.dot",
+    "jax.numpy.dot",
+    "jax.numpy.matmul",
+    "jax.experimental.pallas.dot",
+}
+_PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+_F32 = "jax.numpy.float32"
+
+
+def _is_f32(node: ast.expr, imports: ImportMap) -> bool:
+    return node is not None and resolve(node, imports) == _F32
+
+
+def _check_struct(call: ast.expr, imports: ImportMap, path: str,
+                  diags: List[Diagnostic]) -> None:
+    """One element of an out_shape: must be ShapeDtypeStruct(..., f32)."""
+    if not (isinstance(call, ast.Call)
+            and resolve(call.func, imports) == "jax.ShapeDtypeStruct"):
+        diags.append(Diagnostic(
+            CODE, path, call.lineno,
+            "out_shape element is not a literal jax.ShapeDtypeStruct — the "
+            "accumulator dtype cannot be statically verified as f32"))
+        return
+    dtype = keyword_arg(call, "dtype")
+    if dtype is None and len(call.args) >= 2:
+        dtype = call.args[1]
+    if dtype is None or not _is_f32(dtype, imports):
+        diags.append(Diagnostic(
+            CODE, path, call.lineno,
+            "pallas_call out_shape dtype must be jnp.float32 — the out_ref "
+            "is the cross-step accumulator (downcast after the call "
+            "instead)"))
+
+
+def check(project: Project) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    for f in project.matching("repro/kernels/fp_"):
+        if f.tree is None:
+            continue
+        imports = ImportMap(f.tree)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = resolve(node.func, imports)
+            if name in _DOT_FUNCS:
+                pet = keyword_arg(node, "preferred_element_type")
+                if pet is None:
+                    diags.append(Diagnostic(
+                        CODE, f.display, node.lineno,
+                        f"{name.rsplit('.', 1)[1]} without "
+                        f"preferred_element_type=jnp.float32 — the MXU "
+                        f"accumulates in the input dtype (bf16) otherwise"))
+                elif not _is_f32(pet, imports):
+                    diags.append(Diagnostic(
+                        CODE, f.display, node.lineno,
+                        "preferred_element_type must be jnp.float32 in the "
+                        "projection kernels"))
+            elif name == _PALLAS_CALL:
+                out_shape = keyword_arg(node, "out_shape")
+                if out_shape is None:
+                    diags.append(Diagnostic(
+                        CODE, f.display, node.lineno,
+                        "pallas_call without a literal out_shape — the "
+                        "accumulator dtype cannot be statically verified"))
+                elif isinstance(out_shape, (ast.Tuple, ast.List)):
+                    for elt in out_shape.elts:
+                        _check_struct(elt, imports, f.display, diags)
+                else:
+                    _check_struct(out_shape, imports, f.display, diags)
+    return diags

@@ -1,0 +1,47 @@
+"""RL002 — no bare ``assert`` in library code (``src/repro``)."""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.lint.engine import Diagnostic, Project
+
+CODE = "RL002"
+NAME = "no-bare-assert"
+EXPLAIN = """\
+RL002 (no-bare-assert): library code must not validate with `assert`.
+
+`assert` statements are stripped under `python -O`, so an assert-guarded
+precondition silently stops being checked the moment someone runs the
+serving stack optimized — and the AssertionError it raises when it does
+fire carries no actionable message.  Library code under src/repro must
+raise a typed exception instead:
+
+    if geom.geom_type != "fan":
+        raise ValueError(f"fp_fan needs a fan geometry, got "
+                         f"{geom.geom_type!r}; dispatch through get_ops")
+
+Tests and benchmarks are out of scope (pytest asserts are the point there).
+Suppress a deliberate debug-only invariant with
+`# repro-lint: disable=RL002` on the assert line.
+"""
+
+
+def _in_scope(display: str) -> bool:
+    parts = display.split("/")
+    return "repro" in parts and "tests" not in parts
+
+
+def check(project: Project) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    for f in project.files:
+        if f.tree is None or not _in_scope(f.display):
+            continue
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Assert):
+                diags.append(Diagnostic(
+                    CODE, f.display, node.lineno,
+                    "bare assert in library code (stripped under "
+                    "python -O) — raise ValueError/TypeError with an "
+                    "actionable message instead"))
+    return diags

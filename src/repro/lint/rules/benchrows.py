@@ -1,0 +1,146 @@
+"""RL007 — benchmark row inventory vs baseline.json vs ci.yml.
+
+Single source of truth: ``benchmarks.check_regression.expected_rows()``
+(exposed on the CLI as ``--list-expected-rows``) — this rule and the CI
+smoke job both consume it instead of keeping hand-maintained row lists.
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import pathlib
+import re
+import sys
+from typing import List, Tuple
+
+from repro.lint.engine import Diagnostic, Project
+
+CODE = "RL007"
+NAME = "bench-rows"
+EXPLAIN = """\
+RL007 (bench-rows): the benchmark regression gate only fails on rows the
+committed baseline knows about — a *new* bench row that never gets added
+to benchmarks/baseline.json is a silent WARN forever, and a baseline row
+whose bench was renamed is dead weight that fails every future run.  This
+rule closes the loop statically:
+
+  * every gated row a benchmark can emit (csv_rows.append literals, with
+    f-string placeholders widened to a wildcard) must appear in
+    baseline.json when it matches a gated prefix (kernel/fp|bp, serve/,
+    dist/) — run the suite and --write-baseline to add it;
+  * every baseline row must be producible by some csv_rows.append site —
+    otherwise the gate is checking a renamed/removed bench;
+  * ci.yml must assert row presence via
+    `check_regression --list-expected-rows <prefix>` (or grep every
+    expected row literally) for each gated suite it smokes.
+
+Gated prefixes and the expected-row list are imported from
+benchmarks.check_regression — there is exactly one place to edit.
+"""
+
+_APPEND_TARGET = "csv_rows"
+
+
+def _fstring_regex(node: ast.JoinedStr) -> str:
+    parts = []
+    for v in node.values:
+        if isinstance(v, ast.Constant):
+            parts.append(re.escape(str(v.value)))
+        else:
+            parts.append(r"[^,]+")
+    return "".join(parts)
+
+
+def _emitted(root: pathlib.Path) -> List[Tuple[str, int, str, bool]]:
+    """(file, line, row-pattern, is_literal) for every csv_rows.append."""
+    out: List[Tuple[str, int, str, bool]] = []
+    for path in sorted((root / "benchmarks").glob("*.py")):
+        try:
+            tree = ast.parse(path.read_text(encoding="utf-8",
+                                            errors="replace"))
+        except SyntaxError:
+            continue  # reported as RL000 when the file is scanned
+        display = f"benchmarks/{path.name}"
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "append"
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == _APPEND_TARGET
+                    and node.args
+                    and isinstance(node.args[0], ast.Tuple)
+                    and node.args[0].elts):
+                continue
+            first = node.args[0].elts[0]
+            if isinstance(first, ast.Constant) and isinstance(first.value,
+                                                              str):
+                out.append((display, node.lineno, first.value, True))
+            elif isinstance(first, ast.JoinedStr):
+                out.append((display, node.lineno, _fstring_regex(first),
+                            False))
+    return out
+
+
+def check(project: Project) -> List[Diagnostic]:
+    root = project.root
+    cr_path = root / "benchmarks" / "check_regression.py"
+    if not cr_path.exists():
+        return []
+    sys.path.insert(0, str(root))
+    try:
+        cr = importlib.import_module("benchmarks.check_regression")
+    except Exception as e:  # pragma: no cover - environment failure
+        return [Diagnostic(CODE, "benchmarks/check_regression.py", 1,
+                           f"could not import benchmarks.check_regression "
+                           f"for the expected-row list: {e}")]
+    finally:
+        sys.path.remove(str(root))
+
+    expected = set(cr.expected_rows())
+    gates = (cr.GATE, cr.SERVE_GATE, cr.DIST_GATE)
+    emitted = _emitted(root)
+    diags: List[Diagnostic] = []
+
+    # 1) gated emitted literals must be in the baseline
+    for display, line, pattern, is_literal in emitted:
+        if not is_literal:
+            continue
+        if any(g.match(pattern) for g in gates) and pattern not in expected:
+            diags.append(Diagnostic(
+                CODE, display, line,
+                f"bench row {pattern!r} matches a gated prefix but is not "
+                f"in benchmarks/baseline.json — the regression gate only "
+                f"WARNs on unknown rows, so this row is silently ungated "
+                f"(run the suite and --write-baseline)"))
+
+    # 2) every baseline row must be producible by some append site
+    literals = {p for _, _, p, lit in emitted if lit}
+    regexes = [re.compile(p + r"\Z") for _, _, p, lit in emitted if not lit]
+    for row in sorted(expected):
+        if row in literals or any(r.match(row) for r in regexes):
+            continue
+        diags.append(Diagnostic(
+            CODE, "benchmarks/baseline.json", 1,
+            f"baseline row {row!r} is not emitted by any csv_rows.append "
+            f"in benchmarks/ — a renamed or removed bench would fail "
+            f"every future gate run (regenerate the baseline)"))
+
+    # 3) ci.yml must consume the expected-row list per gated suite
+    ci_path = root / ".github" / "workflows" / "ci.yml"
+    if ci_path.exists():
+        ci = ci_path.read_text(encoding="utf-8", errors="replace")
+        for prefix in ("kernel/", "serve/", "dist/"):
+            rows = [r for r in expected if r.startswith(prefix)]
+            if not rows:
+                continue
+            uses_list = "--list-expected-rows" in ci and prefix in ci
+            if uses_list or all(r in ci for r in rows):
+                continue
+            missing = [r for r in rows if r not in ci]
+            diags.append(Diagnostic(
+                CODE, ".github/workflows/ci.yml", 1,
+                f"CI does not assert the {prefix}* bench rows — use "
+                f"`check_regression --list-expected-rows {prefix}` in the "
+                f"smoke job ({len(missing)} expected rows unchecked, e.g. "
+                f"{missing[0]!r})"))
+    return diags

@@ -1,0 +1,141 @@
+"""RL004 — hash-stability of the spec/geometry identity paths."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.lint.astutil import ImportMap, keyword_arg, resolve
+from repro.lint.engine import Diagnostic, Project
+
+CODE = "RL004"
+NAME = "stable-hashing"
+EXPLAIN = """\
+RL004 (stable-hashing): the serving cache keys must be content-stable.
+
+ProjectorSpec.cache_key/bucket_key and CTGeometry.key/canonical_hash are
+persisted (autotune disk cache, bucket routing) and compared across
+processes — so every function on those paths must be a pure function of
+*content*.  Inside the identity-path closure (the root functions plus
+every same-module function they call) the rule flags:
+
+  * id(...)            — process-specific object identity
+  * hash(...)          — salted per-process (PYTHONHASHSEED)
+  * repr(...) / f"{x!r}" — representation, not content (dataclass/ndarray
+                           reprs change across library versions)
+  * .items()/.keys()/.values() not wrapped in sorted(...) — dict order is
+    insertion-dependent
+  * json.dumps without sort_keys=True — unless the payload is a literal
+    list/tuple, whose order is explicit and intentional
+
+Fix: canonicalize first (float32 cast, sorted items, sha256 of raw bytes)
+like geometry._canon_value does.  Suppress a genuinely order-explicit site
+with `# repro-lint: disable=RL004` and a justifying comment.
+"""
+
+_ROOTS = {"key", "canonical_hash", "cache_key", "bucket_key", "_identity",
+          "_canon_value"}
+_VIEWS = {"items", "keys", "values"}
+
+
+def _in_scope(display: str) -> bool:
+    return display.endswith("core/spec.py") \
+        or display.endswith("core/geometry.py")
+
+
+def _functions(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+    """All function/method defs keyed by bare name (methods shadow module
+    functions of the same name only if defined later — fine here: the two
+    scoped files keep names unique)."""
+    out: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+def _callees(fn: ast.FunctionDef, known: Set[str]) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Name) and node.func.id in known:
+            out.add(node.func.id)
+        elif isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id in ("self", "cls") \
+                and node.func.attr in known:
+            out.add(node.func.attr)
+    return out
+
+
+def _closure(funcs: Dict[str, ast.FunctionDef]) -> Set[str]:
+    todo = [n for n in _ROOTS if n in funcs]
+    seen: Set[str] = set()
+    while todo:
+        name = todo.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        todo.extend(_callees(funcs[name], set(funcs)) - seen)
+    return seen
+
+
+def _sorted_args(fn: ast.FunctionDef) -> Set[int]:
+    """ids of call nodes that appear directly as an argument of sorted()."""
+    out: Set[int] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "sorted":
+            for a in node.args:
+                out.add(id(a))
+    return out
+
+
+def check(project: Project) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    for f in project.files:
+        if f.tree is None or not _in_scope(f.display):
+            continue
+        imports = ImportMap(f.tree)
+        funcs = _functions(f.tree)
+        for name in sorted(_closure(funcs)):
+            fn = funcs[name]
+            ok_sorted = _sorted_args(fn)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in ("id", "hash", "repr"):
+                    diags.append(Diagnostic(
+                        CODE, f.display, node.lineno,
+                        f"{node.func.id}() in identity path {name}() is "
+                        f"not content-stable across processes"))
+                elif isinstance(node, ast.FormattedValue) \
+                        and node.conversion == ord("r"):
+                    diags.append(Diagnostic(
+                        CODE, f.display, node.lineno,
+                        f"!r conversion in identity path {name}() — repr "
+                        f"is representation, not content"))
+                elif isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _VIEWS \
+                        and not node.args and not node.keywords \
+                        and id(node) not in ok_sorted:
+                    diags.append(Diagnostic(
+                        CODE, f.display, node.lineno,
+                        f".{node.func.attr}() in identity path {name}() "
+                        f"must be wrapped in sorted(...) — dict order is "
+                        f"insertion-dependent"))
+                elif isinstance(node, ast.Call) \
+                        and resolve(node.func, imports) == "json.dumps":
+                    sk = keyword_arg(node, "sort_keys")
+                    stable = (isinstance(sk, ast.Constant)
+                              and sk.value is True)
+                    literal_seq = bool(node.args) and isinstance(
+                        node.args[0], (ast.List, ast.Tuple))
+                    if not stable and not literal_seq:
+                        diags.append(Diagnostic(
+                            CODE, f.display, node.lineno,
+                            f"json.dumps in identity path {name}() needs "
+                            f"sort_keys=True (or a literal list payload "
+                            f"with explicit order)"))
+    return diags

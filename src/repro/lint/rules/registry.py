@@ -1,0 +1,115 @@
+"""RL006 — kernel registry completeness (introspection pass).
+
+Unlike the AST rules this one imports the live package: a registry filled
+at import time can only be checked by importing it.  It is skipped
+silently when the scanned tree is not a repo checkout (no
+``src/repro/kernels``), which is what lets the lint test fixtures run in a
+tmp directory.
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.lint.engine import Diagnostic, Project
+
+CODE = "RL006"
+NAME = "registry-complete"
+EXPLAIN = """\
+RL006 (registry-complete): every registered Pallas kernel arrives as a
+*suite*, not a lone function.  For each (geom_type, model) entry in
+repro.kernels.ops._KERNEL_TABLE the contract (PRs 2-5) is:
+
+  * a matched BP — fp/bp are each other's VJP, so an entry without a bp
+    silently breaks gradients;
+  * a reference oracle in repro.kernels.ref (register_reference) — the
+    correctness anchor every kernel test compares against;
+  * a shape-class branch for the geom_type in kernels/tune.py
+    (heuristic_config) — otherwise autotune falls back to defaults and
+    the perf numbers are meaningless;
+  * coverage in tests/test_adjoint.py (the BF16_GEOMS parametrization
+    must name the geom_type) — the <A x, y> = <x, A^T y> dot test is the
+    adjointness gate.
+
+Fix: register the missing piece alongside the kernel.  Diagnostics anchor
+at the register_kernel(...) call that created the incomplete entry.
+"""
+
+
+def _register_sites(project: Project) -> Dict[Tuple[str, str],
+                                              Tuple[str, int]]:
+    """(geom_type, model) -> (file, line) of its register_kernel call."""
+    sites: Dict[Tuple[str, str], Tuple[str, int]] = {}
+    for f in project.matching("repro/kernels/"):
+        if f.tree is None:
+            continue
+        for node in ast.walk(f.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "register_kernel"
+                    and len(node.args) >= 2
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[1], ast.Constant)):
+                continue
+            key = (str(node.args[0].value), str(node.args[1].value))
+            sites[key] = (f.display, node.lineno)
+    return sites
+
+
+def _names_literal(path, literal: str) -> bool:
+    if not path.exists():
+        return False
+    text = path.read_text(encoding="utf-8", errors="replace")
+    return f'"{literal}"' in text or f"'{literal}'" in text
+
+
+def check(project: Project) -> List[Diagnostic]:
+    root = project.root
+    kernels = root / "src" / "repro" / "kernels"
+    # only a real checkout (ops + tune present) is introspectable — a
+    # partial tree would produce anchors into files that don't exist
+    if not ((kernels / "ops.py").is_file()
+            and (kernels / "tune.py").is_file()):
+        return []
+    try:
+        importlib.import_module("repro.kernels")
+        ops = importlib.import_module("repro.kernels.ops")
+        ref = importlib.import_module("repro.kernels.ref")
+    except Exception as e:  # pragma: no cover - environment failure
+        return [Diagnostic(CODE, "src/repro/kernels/ops.py", 1,
+                           f"could not import repro.kernels to introspect "
+                           f"the registry (run with PYTHONPATH=src): {e}")]
+
+    sites = _register_sites(project)
+    tune_path = root / "src" / "repro" / "kernels" / "tune.py"
+    adjoint_path = root / "tests" / "test_adjoint.py"
+    diags: List[Diagnostic] = []
+    for key in sorted(ops._KERNEL_TABLE):
+        geom_type, model = key
+        entry = ops._KERNEL_TABLE[key]
+        path, line = sites.get(key, ("src/repro/kernels/ops.py", 1))
+        where = f"kernel entry ({geom_type!r}, {model!r})"
+        if entry.bp is None:
+            diags.append(Diagnostic(
+                CODE, path, line,
+                f"{where} has no matched BP — fp/bp must be registered as "
+                f"a VJP pair"))
+        if key not in ref._FP_TABLE:
+            diags.append(Diagnostic(
+                CODE, path, line,
+                f"{where} has no reference oracle — add "
+                f"ref.register_reference({geom_type!r}, {model!r}, ...)"))
+        if not _names_literal(tune_path, geom_type):
+            diags.append(Diagnostic(
+                CODE, path, line,
+                f"{where}: kernels/tune.py has no shape-class branch "
+                f"naming {geom_type!r} — autotune would fall back to "
+                f"defaults"))
+        if not _names_literal(adjoint_path, geom_type):
+            diags.append(Diagnostic(
+                CODE, path, line,
+                f"{where}: tests/test_adjoint.py does not parametrize "
+                f"over {geom_type!r} — the adjoint dot-test must cover "
+                f"every registered geometry"))
+    return diags

@@ -1,0 +1,110 @@
+"""RL005 — CTServer request path must not trigger compilation."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.lint.astutil import ImportMap, resolve
+from repro.lint.engine import Diagnostic, Project
+
+CODE = "RL005"
+NAME = "warm-path"
+EXPLAIN = """\
+RL005 (warm-path): serving latency SLOs assume CTServer compiles only at
+warm() time.  A jit/pallas/autotune call reachable from the request path
+means the first production request of a new shape pays seconds of XLA
+compilation inside its latency budget.
+
+Contract: compile triggers (jax.jit, pl.pallas_call, tune.autotune,
+power_iteration — which jits a power method internally) may appear only in
+the memoized builder seam {warm, _executor, _solver_fn}.  The request-path
+roots {submit, step, drain, take_responses, pending, _pick_bucket} and
+every non-seam method/function they transitively call must be free of
+them; the only way from a request to a compiler is through _executor's
+memo dict, which warm() pre-populates.
+
+Fix: move the trigger into _solver_fn/_executor and pre-trigger it from
+warm().  Suppress (with a latency justification) via
+`# repro-lint: disable=RL005`.
+"""
+
+_SEAM = {"warm", "_executor", "_solver_fn"}
+_ROOTS = {"submit", "step", "drain", "take_responses", "pending",
+          "_pick_bucket"}
+_TRIGGER_RESOLVED = {"jax.jit", "jax.pmap", "jax.xla_computation"}
+_TRIGGER_NAMES = {"pallas_call", "autotune", "power_iteration", "jit"}
+
+
+def _in_scope(display: str) -> bool:
+    return display.endswith("ct_serve.py")
+
+
+def _trigger(node: ast.Call, imports: ImportMap) -> Optional[str]:
+    name = resolve(node.func, imports)
+    if name in _TRIGGER_RESOLVED:
+        return name
+    last = (name or "").rsplit(".", 1)[-1]
+    if last in _TRIGGER_NAMES:
+        return name
+    return None
+
+
+def _callees(fn: ast.FunctionDef, methods: Set[str],
+             module_fns: Set[str]) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == "self" \
+                and node.func.attr in methods:
+            out.add(node.func.attr)
+        elif isinstance(node.func, ast.Name) and node.func.id in module_fns:
+            out.add(node.func.id)
+    return out
+
+
+def check(project: Project) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    for f in project.files:
+        if f.tree is None or not _in_scope(f.display):
+            continue
+        imports = ImportMap(f.tree)
+        server: Optional[ast.ClassDef] = None
+        module_fns: Dict[str, ast.FunctionDef] = {}
+        for node in ast.iter_child_nodes(f.tree):
+            if isinstance(node, ast.ClassDef) and node.name == "CTServer":
+                server = node
+            elif isinstance(node, ast.FunctionDef):
+                module_fns[node.name] = node
+        if server is None:
+            continue
+        methods = {n.name: n for n in server.body
+                   if isinstance(n, ast.FunctionDef)}
+        lookup: Dict[str, ast.FunctionDef] = dict(module_fns)
+        lookup.update(methods)
+
+        reachable: Set[str] = set()
+        todo = [r for r in _ROOTS if r in methods]
+        while todo:
+            name = todo.pop()
+            if name in reachable or name in _SEAM:
+                continue
+            reachable.add(name)
+            todo.extend(_callees(lookup[name], set(methods),
+                                 set(module_fns)) - reachable)
+
+        for name in sorted(reachable):
+            for node in ast.walk(lookup[name]):
+                if not isinstance(node, ast.Call):
+                    continue
+                trig = _trigger(node, imports)
+                if trig:
+                    diags.append(Diagnostic(
+                        CODE, f.display, node.lineno,
+                        f"compile trigger {trig}() reachable from the "
+                        f"CTServer request path via {name}() — move it "
+                        f"behind the warm()/_executor()/_solver_fn() "
+                        f"seam"))
+    return diags

@@ -67,13 +67,22 @@ class ModelConfig:
                                        # (TP all-reduces vanish; see §Perf)
 
     def __post_init__(self):
-        assert self.family in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
-        if self.family == "moe":
-            assert self.moe is not None
-        if self.family in ("ssm", "hybrid"):
-            assert self.ssm is not None
-        if self.n_heads and self.n_kv_heads:
-            assert self.n_heads % self.n_kv_heads == 0
+        families = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+        if self.family not in families:
+            raise ValueError(f"unknown model family {self.family!r}; "
+                             f"expected one of {families}")
+        if self.family == "moe" and self.moe is None:
+            raise ValueError("family='moe' needs a MoEConfig in the `moe` "
+                             "field")
+        if self.family in ("ssm", "hybrid") and self.ssm is None:
+            raise ValueError(f"family={self.family!r} needs an SSMConfig in "
+                             f"the `ssm` field")
+        if self.n_heads and self.n_kv_heads \
+                and self.n_heads % self.n_kv_heads:
+            raise ValueError(
+                f"n_heads={self.n_heads} must be divisible by "
+                f"n_kv_heads={self.n_kv_heads} (GQA groups query heads "
+                f"evenly over kv heads)")
 
     @property
     def resolved_head_dim(self) -> int:

@@ -78,7 +78,10 @@ def mamba_train(params, x, cfg: ModelConfig, chunk: int = 512):
 
     C = min(chunk, S)
     nc = S // C
-    assert S % C == 0, f"seq {S} not divisible by ssm chunk {C}"
+    if S % C:
+        raise ValueError(f"sequence length {S} is not divisible by the ssm "
+                         f"chunk size {C}; pad the sequence or pass a chunk "
+                         f"that divides it")
     resh = lambda a: a.reshape(B, nc, C, *a.shape[2:]).swapaxes(0, 1)
     xs_c, dt_c, B_c, C_c = map(resh, (xcf, dt, Bs, Cs))
 

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.models import layers as L
 from repro.models import mamba as M
 from repro.models import moe as MOE
@@ -72,9 +73,7 @@ def init_params(cfg: ModelConfig, key):
     """Real (smoke-test-scale) initialization."""
     dt = jnp.dtype(cfg.param_dtype)
     shapes = param_shapes(cfg)
-    # jax.tree.flatten_with_path only exists on jax >= 0.4.38; the
-    # tree_util spelling works on every version we support.
-    flat, treedef = jax.tree_util.tree_flatten_with_path(
+    flat, treedef = compat.tree_flatten_with_path(
         shapes, is_leaf=lambda s: isinstance(s, tuple))
     keys = jax.random.split(key, len(flat))
     leaves = []
@@ -123,7 +122,7 @@ def _cast_layer(lp, dtype):
         if name in _F32_LEAVES or not jnp.issubdtype(a.dtype, jnp.floating):
             return a
         return a.astype(dtype)
-    return jax.tree_util.tree_map_with_path(f, lp)
+    return compat.tree_map_with_path(f, lp)
 
 
 def _block_train(cfg: ModelConfig, params, x, positions, is_global, ac):

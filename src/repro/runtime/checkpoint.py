@@ -28,10 +28,12 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import compat
+
 
 def _flatten(tree) -> dict:
     flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+    for path, leaf in compat.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(p.key if hasattr(p, "key") else p.idx
                            if hasattr(p, "idx") else p) for p in path)
         flat[key] = leaf
@@ -138,7 +140,7 @@ def restore(ckpt_dir: str, tree_like: Any,
     if missing:
         raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:5]}...")
     # rebuild in tree_like's structure
-    paths = jax.tree_util.tree_flatten_with_path(tree_like)
+    paths = compat.tree_flatten_with_path(tree_like)
     keys_in_order = []
     for path, _ in paths[0]:
         keys_in_order.append("/".join(

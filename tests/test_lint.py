@@ -1,0 +1,399 @@
+"""repro-lint rule tests: violating / clean / suppressed fixture per rule,
+CLI behavior, and the tree-is-clean integration gate.
+
+File-scoped rules (RL001-RL005) run on fixture files written under a tmp
+root whose layout mirrors the paths each rule scopes to.  The
+introspection rules (RL006/RL007) are tested against the real repo — a
+fake incomplete registry entry for the negative case, the actual tree for
+the positive one.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import textwrap
+
+import pytest
+
+from repro.lint.engine import collect, run_rules
+from repro.lint.rules import (ALL_RULES, accumulator, asserts, benchrows,
+                              by_code, drift, hashing, registry, warmpath)
+from repro.lint.__main__ import main as lint_main
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_fixture(tmp_path, relpath, source, rule):
+    p = tmp_path / relpath
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    project = collect([str(p)], tmp_path)
+    return run_rules(project, [rule])
+
+
+# --------------------------------------------------------------------- #
+# RL001 — f32 accumulator policy
+# --------------------------------------------------------------------- #
+RL001_SRC = """\
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kern(a, b, o_ref):
+        bad = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())))
+        good = jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        wrong = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.bfloat16)
+        sup = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())))  # repro-lint: disable=RL001
+        return bad, good, wrong, sup
+
+    def run(x):
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((8, 8), jnp.bfloat16),
+        )(x)
+
+    def run_ok(x):
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+        )(x)
+"""
+
+
+def test_rl001_fixture(tmp_path):
+    diags = run_fixture(tmp_path, "src/repro/kernels/fp_fix.py",
+                        RL001_SRC, accumulator)
+    lines = sorted(d.line for d in diags)
+    msgs = " | ".join(d.message for d in diags)
+    # missing pet, wrong pet, bf16 out_shape — suppressed + clean stay out
+    if len(diags) != 3:
+        raise AssertionError(f"want 3 RL001 diags, got {diags}")
+    if "preferred_element_type" not in msgs or "out_shape" not in msgs:
+        raise AssertionError(msgs)
+    if lines != [6, 10, 17]:
+        raise AssertionError(lines)
+
+
+def test_rl001_out_of_scope(tmp_path):
+    # same violations in flash.py (not fp_*) are by-design out of scope
+    diags = run_fixture(tmp_path, "src/repro/kernels/flash.py",
+                        RL001_SRC, accumulator)
+    if diags:
+        raise AssertionError(diags)
+
+
+# --------------------------------------------------------------------- #
+# RL002 — no bare assert
+# --------------------------------------------------------------------- #
+RL002_SRC = """\
+    def f(x):
+        assert x > 0, "bad"
+        return x
+
+    def g(x):
+        if x <= 0:
+            raise ValueError(f"x={x} must be positive")
+        assert x < 9  # repro-lint: disable=RL002
+        return x
+"""
+
+
+def test_rl002_fixture(tmp_path):
+    diags = run_fixture(tmp_path, "src/repro/util.py", RL002_SRC, asserts)
+    if [d.line for d in diags] != [2]:
+        raise AssertionError(diags)
+    if "python -O" not in diags[0].message:
+        raise AssertionError(diags[0].message)
+
+
+def test_rl002_tests_out_of_scope(tmp_path):
+    diags = run_fixture(tmp_path, "tests/test_x.py", RL002_SRC, asserts)
+    if diags:
+        raise AssertionError(diags)
+
+
+# --------------------------------------------------------------------- #
+# RL003 — compat drift firewall
+# --------------------------------------------------------------------- #
+RL003_SRC = """\
+    import jax
+    from repro import compat
+
+    def save(tree, compiled):
+        flat = jax.tree_util.tree_flatten_with_path(tree)
+        cost = compiled.cost_analysis()
+        ok = compat.tree_flatten_with_path(tree)
+        sup = jax.tree_util.tree_map_with_path(str, tree)  # repro-lint: disable=RL003
+        return flat, cost, ok, sup
+"""
+
+
+def test_rl003_fixture(tmp_path):
+    diags = run_fixture(tmp_path, "src/repro/runtime/save.py",
+                        RL003_SRC, drift)
+    if [d.line for d in diags] != [5, 6]:
+        raise AssertionError(diags)
+    if "compat.tree_flatten_with_path" not in diags[0].message:
+        raise AssertionError(diags[0].message)
+    if "cost_analysis_dict" not in diags[1].message:
+        raise AssertionError(diags[1].message)
+
+
+def test_rl003_forbidden_import(tmp_path):
+    src = "from jax.experimental.shard_map import shard_map\n"
+    diags = run_fixture(tmp_path, "src/repro/x.py", src, drift)
+    if len(diags) != 1 or "compat.shard_map" not in diags[0].message:
+        raise AssertionError(diags)
+
+
+def test_rl003_compat_itself_exempt(tmp_path):
+    diags = run_fixture(tmp_path, "src/repro/compat.py", RL003_SRC, drift)
+    if diags:
+        raise AssertionError(diags)
+
+
+# --------------------------------------------------------------------- #
+# RL004 — hash stability
+# --------------------------------------------------------------------- #
+RL004_SRC = """\
+    import json
+
+    class Spec:
+        def cache_key(self):
+            a = json.dumps({"k": self.v})
+            b = hash(self.v)
+            for k, v in self.d.items():
+                a += k
+            ok1 = json.dumps(["geom", self.v], sort_keys=False)
+            ok2 = dict(sorted(self.d.items()))
+            ok3 = json.dumps(self.d, sort_keys=True)
+            sup = id(self)  # repro-lint: disable=RL004
+            return a, b, ok1, ok2, ok3, sup
+
+        def unrelated(self):
+            return repr(self.d)
+"""
+
+
+def test_rl004_fixture(tmp_path):
+    diags = run_fixture(tmp_path, "src/repro/core/spec.py",
+                        RL004_SRC, hashing)
+    lines = sorted(d.line for d in diags)
+    # unsorted json.dumps(dict), hash(), unsorted .items(); the literal
+    # list dumps / sorted items / sort_keys=True / suppressed id() pass;
+    # repr in unrelated() is outside the identity-path closure
+    if lines != [5, 6, 7]:
+        raise AssertionError(diags)
+
+
+def test_rl004_closure_follows_helpers(tmp_path):
+    src = """\
+        class Spec:
+            def bucket_key(self):
+                return self._mix()
+
+            def _mix(self):
+                return id(self)
+    """
+    diags = run_fixture(tmp_path, "src/repro/core/spec.py", src, hashing)
+    if len(diags) != 1 or "id()" not in diags[0].message:
+        raise AssertionError(diags)
+    if "_mix" not in diags[0].message:
+        raise AssertionError(diags[0].message)
+
+
+# --------------------------------------------------------------------- #
+# RL005 — CTServer warm path
+# --------------------------------------------------------------------- #
+RL005_SRC = """\
+    import jax
+
+    class CTServer:
+        def warm(self, spec):
+            return jax.jit(lambda x: x)
+
+        def _executor(self, key):
+            return jax.jit(lambda x: x)
+
+        def _helper(self):
+            return jax.jit(lambda x: x)
+
+        def step(self):
+            fn = self._executor("k")
+            return fn(self._helper())
+
+        def submit(self, req):
+            f = jax.jit(lambda x: x)  # repro-lint: disable=RL005
+            return f
+"""
+
+
+def test_rl005_fixture(tmp_path):
+    diags = run_fixture(tmp_path, "src/repro/launch/ct_serve.py",
+                        RL005_SRC, warmpath)
+    # only the jit inside _helper (reached from step) fires: warm/_executor
+    # are the seam, the submit jit is suppressed
+    if len(diags) != 1 or diags[0].line != 11:
+        raise AssertionError(diags)
+    if "_helper" not in diags[0].message:
+        raise AssertionError(diags[0].message)
+
+
+def test_rl005_other_files_out_of_scope(tmp_path):
+    diags = run_fixture(tmp_path, "src/repro/launch/other.py",
+                        RL005_SRC, warmpath)
+    if diags:
+        raise AssertionError(diags)
+
+
+# --------------------------------------------------------------------- #
+# RL006 — registry completeness (introspects the real registry)
+# --------------------------------------------------------------------- #
+def _real_project():
+    return collect(["src", "tests", "benchmarks"], REPO)
+
+
+def test_rl006_real_registry_is_complete():
+    diags = registry.check(_real_project())
+    if diags:
+        raise AssertionError([d.format() for d in diags])
+
+
+def test_rl006_flags_incomplete_entry(monkeypatch):
+    from repro.kernels import ops
+    fake = ops._KernelEntry(fp=lambda *a: None, bp=None)
+    monkeypatch.setitem(ops._KERNEL_TABLE, ("helical", "sf"), fake)
+    diags = [d for d in registry.check(_real_project())
+             if "helical" in d.message]
+    msgs = " | ".join(d.message for d in diags)
+    # no bp, no oracle, no tune branch, no adjoint coverage
+    if len(diags) != 4:
+        raise AssertionError(msgs)
+    for want in ("matched BP", "reference oracle", "tune", "adjoint"):
+        if want not in msgs:
+            raise AssertionError(f"missing {want!r} in: {msgs}")
+
+
+# --------------------------------------------------------------------- #
+# RL007 — bench rows vs baseline vs ci.yml (real tree + negative)
+# --------------------------------------------------------------------- #
+def test_rl007_real_tree_consistent():
+    diags = benchrows.check(_real_project())
+    if diags:
+        raise AssertionError([d.format() for d in diags])
+
+
+def test_rl007_detects_drift(tmp_path, monkeypatch):
+    bench = tmp_path / "benchmarks"
+    bench.mkdir()
+    (bench / "__init__.py").write_text("")
+    (bench / "check_regression.py").write_text(textwrap.dedent("""\
+        import re
+        GATE = re.compile(r"^kernel/(fp|bp)")
+        SERVE_GATE = re.compile(r"^serve/")
+        DIST_GATE = re.compile(r"^dist/")
+        def expected_rows(prefixes=()):
+            return ["kernel/fp_old/pallas"]
+    """))
+    (bench / "bench_fix.py").write_text(textwrap.dedent("""\
+        csv_rows = []
+        def run():
+            csv_rows.append(("kernel/bp_new/pallas", 1.0, "tag"))
+            csv_rows.append(("recon/ungated", 1.0, "tag"))
+    """))
+    # the real benchmarks package is already imported by other tests;
+    # force the tmp one to win for this check
+    monkeypatch.delitem(sys.modules, "benchmarks", raising=False)
+    monkeypatch.delitem(sys.modules, "benchmarks.check_regression",
+                        raising=False)
+    diags = benchrows.check(collect([str(bench)], tmp_path))
+    monkeypatch.delitem(sys.modules, "benchmarks", raising=False)
+    monkeypatch.delitem(sys.modules, "benchmarks.check_regression",
+                        raising=False)
+    msgs = " | ".join(d.message for d in diags)
+    # new gated row not in baseline + stale baseline row never emitted
+    if len(diags) != 2:
+        raise AssertionError(msgs)
+    if "kernel/bp_new/pallas" not in msgs \
+            or "kernel/fp_old/pallas" not in msgs:
+        raise AssertionError(msgs)
+
+
+def test_rl007_fstring_rows_match():
+    rx = benchrows._fstring_regex
+    import ast as _ast
+    node = _ast.parse('f"kernel/fp2d_b{B}/pallas"').body[0].value
+    import re as _re
+    if not _re.fullmatch(rx(node), "kernel/fp2d_b8/pallas"):
+        raise AssertionError(rx(node))
+
+
+# --------------------------------------------------------------------- #
+# Engine: pragmas, parse errors, CLI
+# --------------------------------------------------------------------- #
+def test_parse_error_is_rl000(tmp_path):
+    diags = run_fixture(tmp_path, "src/repro/broken.py",
+                        "def f(:\n", asserts)
+    if len(diags) != 1 or diags[0].code != "RL000":
+        raise AssertionError(diags)
+
+
+def test_pragma_inside_string_does_not_suppress(tmp_path):
+    src = '''\
+        def f(x):
+            s = "# repro-lint: disable=RL002"
+            assert x, s
+            return s
+    '''
+    diags = run_fixture(tmp_path, "src/repro/u.py", src, asserts)
+    if len(diags) != 1:
+        raise AssertionError(diags)
+
+
+def test_explain_known_and_unknown(capsys):
+    if lint_main(["--explain", "RL004"]) != 0:
+        raise AssertionError("explain RL004 should exit 0")
+    out = capsys.readouterr().out
+    if "content-stable" not in out:
+        raise AssertionError(out)
+    if lint_main(["--explain", "RL999"]) != 2:
+        raise AssertionError("unknown code should exit 2")
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "m.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def f(x):\n    assert x\n")
+    if lint_main([str(bad), "--root", str(tmp_path),
+                  "--select", "RL002"]) != 1:
+        raise AssertionError("violation should exit 1")
+    if lint_main([str(tmp_path / "nope"), "--root", str(tmp_path)]) != 2:
+        raise AssertionError("missing path should exit 2")
+    bad.write_text("def f(x):\n    return x\n")
+    if lint_main([str(bad), "--root", str(tmp_path),
+                  "--select", "RL002"]) != 0:
+        raise AssertionError("clean should exit 0")
+    capsys.readouterr()
+
+
+def test_every_rule_has_docs():
+    for rule in ALL_RULES:
+        for attr in ("CODE", "NAME", "EXPLAIN", "check"):
+            if not hasattr(rule, attr):
+                raise AssertionError(f"{rule} missing {attr}")
+        if by_code(rule.CODE) is not rule:
+            raise AssertionError(rule.CODE)
+        if rule.CODE not in rule.EXPLAIN:
+            raise AssertionError(f"{rule.CODE} EXPLAIN must name itself")
+
+
+# --------------------------------------------------------------------- #
+# The acceptance gate: the tree itself is clean
+# --------------------------------------------------------------------- #
+def test_tree_is_clean():
+    project = collect(["src", "tests", "benchmarks"], REPO)
+    diags = run_rules(project, ALL_RULES)
+    if diags:
+        raise AssertionError("\n".join(d.format() for d in diags))
