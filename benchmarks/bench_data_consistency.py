@@ -1,71 +1,45 @@
-"""Paper Fig. 3: limited-angle inference + data-consistency refinement.
-Trains the small U-Net for a short schedule, then reports PSNR/SSIM of the
-network prediction vs the refined image on held-out phantoms (the paper
-reports 35.486/0.905 -> 36.350/0.911 on luggage data; we reproduce the
-*improvement* on synthetic phantoms)."""
+"""Paper Fig. 3 at CI scale: projector-in-the-loop training + DC refinement
+quality, per hard geometry.
+
+Runs the tiny :func:`repro.launch.ct_train.smoke_config` schedule for each
+of the three hard geometries (limited-angle parallel, sparse-view fan,
+helical modular), then reports held-out reconstruction quality through the
+full paper-§4 inference pipeline.  The ``quality/...`` rows feed the
+floor-style regression gate in ``check_regression.py`` — reconstruction
+quality gets the same CI machinery as kernel latency:
+
+    quality/<geom>/psnr_net       raw network prediction PSNR (dB, EMA params)
+    quality/<geom>/psnr_refined   after CG data-consistency refinement (dB)
+    quality/<geom>/ssim_refined   SSIM of the refined image
+    quality/<geom>/dc_residual    relative projection residual of the
+                                  refined image (lower is better)
+
+(The paper reports 35.486/0.905 -> 36.350/0.911 on luggage data; we gate the
+*improvement* and its stability on synthetic phantoms.)  The ``fig3/...``
+latency rows stay informational (training time is machine-bound; quality is
+not)."""
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import Projector, VolumeGeometry, parallel_beam
-from repro.data.metrics import psnr, ssim
-from repro.data.pipeline import CTDataPipeline
-from repro.nn.unet import unet_apply, unet_init
-from repro.optim import adamw, apply_updates, constant
-from repro.recon import complete_and_refine
+from repro.launch.ct_train import GEOMETRIES, CTTrainer, smoke_config
 
 
-def run(csv_rows: list, n=48, steps=40, n_test=4):
-    vol = VolumeGeometry(n, n, 1)
-    geom = parallel_beam(72, 1, int(1.5 * n), vol)
-    proj = Projector(geom, "sf")
-    pipe = CTDataPipeline(geom, batch_size=4, seed=0, available_deg=60.0)
-    params = unet_init(jax.random.PRNGKey(0), base=8, levels=2)
-    opt = adamw(constant(2e-3))
-    state = opt.init(params)
-
-    @jax.jit
-    def step(p, s, x_in, gt, sino, mask):
-        def loss(p):
-            pred = unet_apply(p, x_in[..., None])[..., 0]
-            dc = jnp.mean(jnp.square((proj(pred[..., None]) - sino) * mask))
-            return jnp.mean((pred - gt) ** 2) + 0.1 * dc
-        l, g = jax.value_and_grad(loss)(p)
-        u, s = opt.update(g, s, p)
-        return apply_updates(p, u), s, l
-
-    t0 = time.perf_counter()
-    for i in range(steps):
-        imgs, masks = pipe.batch(i)
-        gt = jnp.asarray(imgs)
-        sino = proj(gt[..., None])
-        mvec = jnp.asarray(masks)[:, :, None, None]
-        x_in = proj.fbp(sino * mvec)[..., 0]
-        params, state, _ = step(params, state, x_in, gt, sino, mvec)
-    t_train = time.perf_counter() - t0
-
-    p_net, p_ref, s_net, s_ref = [], [], [], []
-    for k in range(n_test):
-        img, mask = pipe.sample(10_000 + k, 0)
-        gt = jnp.asarray(img)
-        sino = proj(gt[..., None])
-        mvec = jnp.asarray(mask)[:, None, None]
-        x_in = proj.fbp(sino * mvec)[..., 0]
-        pred = unet_apply(params, x_in[None, ..., None])[0, ..., 0]
-        xr, _ = complete_and_refine(proj, pred[..., None], sino, mvec,
-                                    n_iters=20, beta=0.05)
-        peak = float(gt.max())
-        p_net.append(psnr(pred, gt, peak))
-        p_ref.append(psnr(np.asarray(xr)[..., 0], gt, peak))
-        s_net.append(ssim(pred, gt, peak))
-        s_ref.append(ssim(np.asarray(xr)[..., 0], gt, peak))
-    csv_rows.append(("fig3/train", t_train / steps * 1e6,
-                     f"steps={steps}"))
-    csv_rows.append(("fig3/psnr_net_vs_refined", 0.0,
-                     f"{np.mean(p_net):.3f}->{np.mean(p_ref):.3f}dB"))
-    csv_rows.append(("fig3/ssim_net_vs_refined", 0.0,
-                     f"{np.mean(s_net):.4f}->{np.mean(s_ref):.4f}"))
+def run(csv_rows: list, steps: int = 40, n_test: int = 4):
+    for geometry in GEOMETRIES:
+        cfg = smoke_config(geometry, steps=steps)
+        trainer = CTTrainer(cfg)
+        t0 = time.perf_counter()
+        trainer.fit(log_every=0)
+        t_train = time.perf_counter() - t0
+        m = trainer.evaluate(n_test=n_test)
+        csv_rows.append((f"fig3/{geometry}/train_step",
+                         t_train / cfg.steps * 1e6, f"steps={cfg.steps}"))
+        csv_rows.append((f"quality/{geometry}/psnr_net",
+                         m["psnr_net"], "quality-db"))
+        csv_rows.append((f"quality/{geometry}/psnr_refined",
+                         m["psnr_refined"], "quality-db"))
+        csv_rows.append((f"quality/{geometry}/ssim_refined",
+                         m["ssim_refined"], "quality-ssim"))
+        csv_rows.append((f"quality/{geometry}/dc_residual",
+                         m["dc_refined"], "quality-residual"))

@@ -36,6 +36,16 @@ Distributed weak-scaling rows (``dist/<op>/ws<n>`` from
 scaling *shape* (see DIST_GATE below); they are only compared when the
 fresh CSV ran the suite (it needs 8 visible devices).
 
+A fourth pass gates reconstruction *quality* (``quality/<geom>/<metric>``
+from ``bench_data_consistency``): the value column is a metric (PSNR dB /
+SSIM / relative DC residual), not a latency, so these rows skip the
+normalized-ratio machinery entirely and use a floor-style rule instead —
+PSNR/SSIM must not drop below ``baseline - tolerance`` and the DC residual
+must not rise above ``baseline + tolerance`` (see QUALITY_TOL).  Fixed
+seeds make the tiny training schedule reproducible; the tolerances absorb
+cross-machine XLA codegen jitter while still failing loudly when a kernel,
+the EMA path, or the refinement loop breaks (those lose several dB).
+
 Usage:
     PYTHONPATH=src python -m benchmarks.run --only kernels > fresh.csv
     python -m benchmarks.check_regression fresh.csv              # gate
@@ -98,6 +108,34 @@ SERVE_CPU_GATED_TIERS = ("quality",)
 # 8 host devices onto one core and a real pod.
 DIST_GATE = re.compile(r"^dist/")
 DIST_ROW = re.compile(r"^dist/(?P<op>[^/]+)/ws(?P<n>\d+)$")
+# Reconstruction-quality rows (``quality/<geom>/<metric>`` from
+# bench_data_consistency): floor-gated on the metric *value*.  Each metric
+# kind maps to (direction, tolerance): "floor" fails when
+# fresh < baseline - tol, "ceiling" when fresh > baseline + tol.  PSNR
+# tolerance is deliberately wider than run-to-run seed noise (fixed seeds)
+# but far tighter than any real break: a mis-ordered EMA update, a wrong
+# kernel adjoint, or a dead refinement loop each cost several dB.
+QUALITY_GATE = re.compile(r"^quality/")
+QUALITY_ROW = re.compile(r"^quality/(?P<geom>[^/]+)/(?P<metric>[^/]+)$")
+QUALITY_TOL = {
+    "psnr": ("floor", 1.5),       # dB
+    "ssim": ("floor", 0.05),
+    "dc": ("ceiling", 0.05),      # relative residual
+}
+# The gated row-name prefixes, in one place: RL007 and the CI smoke job
+# both consume this (via expected_rows / --list-expected-rows) instead of
+# keeping their own lists.
+GATED_PREFIXES = ("kernel/", "serve/", "dist/", "quality/")
+
+
+def _quality_rule(name: str):
+    """(direction, tolerance) for a quality row, from its metric prefix."""
+    m = QUALITY_ROW.match(name)
+    if m:
+        for prefix, rule in QUALITY_TOL.items():
+            if m.group("metric").startswith(prefix):
+                return rule
+    return None
 
 
 def expected_rows(prefixes: Tuple[str, ...] = (),
@@ -210,10 +248,19 @@ def write_baseline(runs: List[Dict[str, Tuple[float, str]]],
     names = sorted(set().union(*[set(r) for r in runs]))
     entries = {}
     for name in names:
+        present = [r for r in runs if name in r]
+        if QUALITY_GATE.match(name):
+            # Quality rows gate on the metric value itself (no calibration
+            # row, no latency normalization) — see QUALITY_TOL.
+            entries[name] = {
+                "value": round(statistics.median(r[name][0]
+                                                 for r in present), 4),
+                "runs": len(present),
+            }
+            continue
         if not (GATE.match(name) or SERVE_GATE.match(name)
                 or DIST_GATE.match(name)):
             continue
-        present = [r for r in runs if name in r]
         entries[name] = {
             "norm": round(statistics.median(_norm(r, name)
                                             for r in present), 4),
@@ -294,6 +341,7 @@ def main() -> int:
     has_kernel = any(GATE.match(n) for n in fresh)
     has_serve = any(SERVE_GATE.match(n) for n in fresh)
     has_dist = any(DIST_GATE.match(n) for n in fresh)
+    has_quality = any(QUALITY_GATE.match(n) for n in fresh)
     for name, entry in baseline.items():
         if GATE.match(name) and not has_kernel:
             continue
@@ -301,8 +349,23 @@ def main() -> int:
             continue
         if DIST_GATE.match(name) and not has_dist:
             continue
+        if QUALITY_GATE.match(name) and not has_quality:
+            continue
         if name not in fresh:
             fails.append(f"{name}: missing from fresh run (API drift?)")
+            continue
+        if QUALITY_GATE.match(name):
+            rule = _quality_rule(name)
+            if rule is None:       # unknown metric kind: inventory-only
+                continue
+            direction, tol = rule
+            value, base = fresh[name][0], entry["value"]
+            if direction == "floor" and value < base - tol:
+                fails.append(f"{name}: {value:.4g} below quality floor "
+                             f"{base:.4g} - {tol:g}")
+            elif direction == "ceiling" and value > base + tol:
+                fails.append(f"{name}: {value:.4g} above quality ceiling "
+                             f"{base:.4g} + {tol:g}")
             continue
         norm = _norm(fresh, name)
         ratio = norm / entry["norm"]
@@ -315,7 +378,8 @@ def main() -> int:
         elif ratio > WARN_RATIO or (ratio > FAIL_RATIO and tiny):
             warns.append(line)
     for name in sorted(set(fresh) - set(baseline)):
-        if GATE.match(name) or SERVE_GATE.match(name) or DIST_GATE.match(name):
+        if (GATE.match(name) or SERVE_GATE.match(name)
+                or DIST_GATE.match(name) or QUALITY_GATE.match(name)):
             warns.append(f"{name}: new row not in baseline "
                          f"(regenerate with --write-baseline)")
 
@@ -331,8 +395,10 @@ def main() -> int:
     for f in fails:
         print(f"FAIL: {f}")
     if fails:
-        print(f"{len(fails)} regression(s) > {FAIL_RATIO}x — if intentional, "
-              f"regenerate benchmarks/baseline.json with --write-baseline")
+        print(f"{len(fails)} gate failure(s) (latency > {FAIL_RATIO}x norm, "
+              f"quality past its floor/ceiling, or a missing row) — if "
+              f"intentional, regenerate benchmarks/baseline.json with "
+              f"--write-baseline")
         return 1
     print(f"benchmark gate OK ({len(baseline)} rows checked, "
           f"{len(warns)} warnings)")

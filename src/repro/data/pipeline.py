@@ -90,9 +90,25 @@ class CTDataPipeline:
         return mask
 
     def sample(self, step: int, sample_id: int):
+        """One (phantom, view_mask) pair.  2D geometries (``vol.nz == 1``)
+        get an ``(nx, ny)`` slice; volumetric geometries (helical scans) get
+        an ``(nx, ny, nz)`` volume that interpolates between two independent
+        ellipse keyframes along z — real axial structure for the cost of two
+        rasterizations, so the z-travelling helical rays see a non-trivial
+        object."""
         rng = self._rng(step, sample_id)
-        img, _ = phantoms.random_ellipse_phantom(
-            int(rng.integers(0, 2 ** 31)), self.geom.vol)
+        vol = self.geom.vol
+        if vol.nz == 1:
+            img, _ = phantoms.random_ellipse_phantom(
+                int(rng.integers(0, 2 ** 31)), vol)
+        else:
+            lo, _ = phantoms.random_ellipse_phantom(
+                int(rng.integers(0, 2 ** 31)), vol)
+            hi, _ = phantoms.random_ellipse_phantom(
+                int(rng.integers(0, 2 ** 31)), vol)
+            t = (np.arange(vol.nz, dtype=np.float32)
+                 / max(vol.nz - 1, 1))[None, None, :]
+            img = lo[:, :, None] * (1.0 - t) + hi[:, :, None] * t
         img = img * 0.02  # plausible attenuation scale (1/mm)
         mask = self.make_mask(rng)
         return img.astype(np.float32), mask

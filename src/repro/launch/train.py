@@ -9,7 +9,10 @@ The CT side plugs into the same mesh machinery:
 :func:`make_ct_dp_train_step` builds a data-parallel
 projector-in-the-loop step (the paper's differentiable projector inside
 the loss, gradients pmean'd over the data axis) for training recon
-networks against sinogram consistency.
+networks against sinogram consistency.  It is the minimal DP primitive;
+the full CT training subsystem — supervised + DC losses, EMA, checkpoint
+/resume, eval harness, the same shard_map schedule behind
+``data_parallel=True`` — is :mod:`repro.launch.ct_train`.
 
 Examples:
     # smoke-train an assigned arch (reduced config) on CPU

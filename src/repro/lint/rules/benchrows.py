@@ -27,7 +27,7 @@ rule closes the loop statically:
   * every gated row a benchmark can emit (csv_rows.append literals, with
     f-string placeholders widened to a wildcard) must appear in
     baseline.json when it matches a gated prefix (kernel/fp|bp, serve/,
-    dist/) — run the suite and --write-baseline to add it;
+    dist/, quality/) — run the suite and --write-baseline to add it;
   * every baseline row must be producible by some csv_rows.append site —
     otherwise the gate is checking a renamed/removed bench;
   * ci.yml must assert row presence via
@@ -97,7 +97,7 @@ def check(project: Project) -> List[Diagnostic]:
         sys.path.remove(str(root))
 
     expected = set(cr.expected_rows())
-    gates = (cr.GATE, cr.SERVE_GATE, cr.DIST_GATE)
+    gates = (cr.GATE, cr.SERVE_GATE, cr.DIST_GATE, cr.QUALITY_GATE)
     emitted = _emitted(root)
     diags: List[Diagnostic] = []
 
@@ -129,7 +129,7 @@ def check(project: Project) -> List[Diagnostic]:
     ci_path = root / ".github" / "workflows" / "ci.yml"
     if ci_path.exists():
         ci = ci_path.read_text(encoding="utf-8", errors="replace")
-        for prefix in ("kernel/", "serve/", "dist/"):
+        for prefix in cr.GATED_PREFIXES:
             rows = [r for r in expected if r.startswith(prefix)]
             if not rows:
                 continue

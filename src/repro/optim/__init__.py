@@ -1,6 +1,10 @@
 from repro.optim.adamw import adamw, sgd, clip_by_global_norm, apply_updates
+from repro.optim.ema import (EmaState, ema_decay_schedule, ema_init,
+                             ema_params, ema_update)
 from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
                                    warmup_cosine)
 
 __all__ = ["adamw", "sgd", "clip_by_global_norm", "apply_updates",
-           "constant", "cosine_decay", "linear_warmup", "warmup_cosine"]
+           "constant", "cosine_decay", "linear_warmup", "warmup_cosine",
+           "EmaState", "ema_init", "ema_update", "ema_params",
+           "ema_decay_schedule"]

@@ -1,0 +1,73 @@
+"""Exponential moving average of parameters (eval-time weights).
+
+The trained-model path evaluates (and serves) the EMA of the online
+parameters, not the last SGD iterate — the standard trick behind the
+reported numbers of every modern recon network (Genzel et al.'s near-exact
+recovery harness, the RSNA diffusion-recon pipelines in the related repos).
+
+Follows the repo's optimizer convention: a NamedTuple state living in the
+same pytree structure as the parameters, pure ``init`` / ``update``
+functions, jit-safe throughout::
+
+    ema = ema_init(params)
+    ema = ema_update(ema, params, decay=0.999)      # once per train step
+    metrics = evaluate(ema_params(ema), ...)        # eval on the average
+
+Decay warmup: a fixed 0.999 decay makes the average lag hundreds of steps
+behind a freshly initialized network, so early evaluations see near-random
+weights.  The effective decay ramps as
+
+    decay_t = min(decay, (1 + t) / (warmup + t))
+
+which starts near a plain running mean (decay_1 ~ 2/warmup) and approaches
+the target asymptotically — the Polyak-averaging warmup used by the
+diffusion-model EMA implementations.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EmaState(NamedTuple):
+    step: jnp.ndarray     # int32 scalar — number of updates applied
+    params: Any           # the averaged pytree (same structure as params)
+
+
+def ema_init(params) -> EmaState:
+    """Start the average at the current parameters (not zeros: a zero start
+    would need bias correction everywhere the average is read)."""
+    return EmaState(step=jnp.zeros((), jnp.int32),
+                    params=jax.tree.map(jnp.asarray, params))
+
+
+def ema_decay_schedule(step, decay: float, warmup: int):
+    """Effective decay at update ``step`` (1-based), warmed up from ~0."""
+    t = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    return jnp.minimum(jnp.asarray(decay, jnp.float32),
+                       (1.0 + t) / (float(warmup) + t))
+
+
+def ema_update(state: EmaState, params, decay: float = 0.999,
+               warmup: int = 10) -> EmaState:
+    """One EMA step: ``avg <- d * avg + (1 - d) * params`` with warmed-up
+    ``d`` (see module docstring).  Pure/jittable; call it after every
+    optimizer update."""
+    if not 0.0 <= decay < 1.0:
+        raise ValueError(f"decay must be in [0, 1), got {decay}")
+    if warmup < 1:
+        raise ValueError(f"warmup must be >= 1, got {warmup}")
+    step = state.step + 1
+    d = ema_decay_schedule(step, decay, warmup)
+    avg = jax.tree.map(
+        lambda a, p: (d * a.astype(jnp.float32)
+                      + (1.0 - d) * p.astype(jnp.float32)).astype(a.dtype),
+        state.params, params)
+    return EmaState(step=step, params=avg)
+
+
+def ema_params(state: EmaState):
+    """The averaged parameters (what evaluation should consume)."""
+    return state.params

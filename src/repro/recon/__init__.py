@@ -7,7 +7,10 @@ from repro.recon.result import ReconResult, as_projector
 from repro.recon.sirt import sirt
 from repro.recon.cgls import cgls
 from repro.recon.fista_tv import fista_tv, tv_norm
-from repro.recon.completion import (complete_and_refine, data_consistency_refine)
+from repro.recon.completion import (complete_and_refine,
+                                    data_consistency_refine,
+                                    projection_residual)
 
 __all__ = ["ReconResult", "as_projector", "sirt", "cgls", "fista_tv",
-           "tv_norm", "complete_and_refine", "data_consistency_refine"]
+           "tv_norm", "complete_and_refine", "data_consistency_refine",
+           "projection_residual"]

@@ -55,3 +55,20 @@ def complete_and_refine(spec_or_projector, x_net, y, mask,
     x = data_consistency_refine(projector, x_net, y, mask, n_iters, beta)
     completed = mask * y + (1.0 - mask) * projector(x)
     return x, completed
+
+
+def projection_residual(spec_or_projector, x, y, mask=None):
+    """Relative projection-consistency residual ``||M (A x - y)|| / ||M y||``.
+
+    The scale-free companion of :meth:`Projector.data_consistency`: a value
+    of 0 means the reconstruction explains every measured view exactly, 1
+    means it explains nothing — comparable across geometries and phantom
+    scales, which is what the per-geometry quality gate needs."""
+    projector = as_projector(spec_or_projector)
+    r = projector(x) - y
+    if mask is not None:
+        r = r * mask
+        y = y * mask
+    num = jnp.sqrt(jnp.sum(jnp.square(r)))
+    den = jnp.maximum(jnp.sqrt(jnp.sum(jnp.square(y))), 1e-12)
+    return num / den

@@ -294,6 +294,8 @@ def test_rl007_detects_drift(tmp_path, monkeypatch):
         GATE = re.compile(r"^kernel/(fp|bp)")
         SERVE_GATE = re.compile(r"^serve/")
         DIST_GATE = re.compile(r"^dist/")
+        QUALITY_GATE = re.compile(r"^quality/")
+        GATED_PREFIXES = ("kernel/", "serve/", "dist/", "quality/")
         def expected_rows(prefixes=()):
             return ["kernel/fp_old/pallas"]
     """))

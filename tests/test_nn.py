@@ -1,0 +1,161 @@
+"""Direct unit tests for the recon networks and the paper-§4 inference
+pieces: CT-Net / U-Net shapes+dtypes, gradients through the projector,
+EMA averaging, and the data-consistency refinement contract."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import VolumeGeometry, parallel_beam
+from repro.core.projector import Projector
+from repro.core.spec import ProjectorSpec
+from repro.nn.ctnet import ctnet_apply, ctnet_init
+from repro.nn.unet import unet_apply, unet_init
+from repro.optim import (EmaState, ema_decay_schedule, ema_init, ema_params,
+                         ema_update)
+from repro.recon.completion import (complete_and_refine,
+                                    data_consistency_refine,
+                                    projection_residual)
+
+
+@pytest.fixture(scope="module")
+def small_proj():
+    geom = parallel_beam(18, 1, 18, VolumeGeometry(12, 12, 1))
+    return Projector(ProjectorSpec(geom))
+
+
+# --------------------------------------------------------------------------- #
+# CT-Net (sinogram completion)
+# --------------------------------------------------------------------------- #
+def test_ctnet_shapes_and_passthrough():
+    key = jax.random.PRNGKey(0)
+    p = ctnet_init(key, base=8, depth=2)
+    sino = jax.random.normal(jax.random.fold_in(key, 1), (2, 12, 16))
+    mask = (jnp.arange(12) < 8).astype(jnp.float32)
+    mask2d = mask[None, :, None] * jnp.ones((2, 1, 16))
+    out = ctnet_apply(p, sino * mask2d, mask2d)
+    assert out.shape == (2, 12, 16)
+    assert out.dtype == jnp.float32
+    # measured views are passed through exactly, not re-predicted
+    np.testing.assert_allclose(np.asarray(out[:, :8]),
+                               np.asarray(sino[:, :8]), rtol=1e-6)
+    # missing views get *some* prediction (not the zeroed input)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# --------------------------------------------------------------------------- #
+# U-Net (image refinement)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("ch", [1, 3])
+def test_unet_shapes_multichannel(ch):
+    p = unet_init(jax.random.PRNGKey(0), base=8, levels=2,
+                  in_ch=ch, out_ch=ch)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, ch))
+    y = unet_apply(p, x)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    # zero-initialized output head => the net is exactly the identity at
+    # init (the residual path), which is what keeps training stable
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_unet_grad_through_projector_finite(small_proj):
+    """The paper's core claim at unit scale: d(loss)/d(params) through
+    A(unet(x)) exists and is finite everywhere."""
+    proj = small_proj
+    p = unet_init(jax.random.PRNGKey(0), base=8, levels=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 12, 1)) * 0.02
+    y_meas = proj(unet_apply(p, x)[0]) + 0.1
+
+    def loss(params):
+        return jnp.mean(jnp.square(proj(unet_apply(params, x)[0]) - y_meas))
+
+    g = jax.grad(loss)(p)
+    leaves = jax.tree.leaves(g)
+    assert leaves and all(np.isfinite(np.asarray(l)).all() for l in leaves)
+    # the projector must actually transmit gradient to the weights
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
+
+
+# --------------------------------------------------------------------------- #
+# EMA
+# --------------------------------------------------------------------------- #
+def test_ema_converges_to_constant_stream():
+    params = {"w": jnp.zeros((3,)), "b": jnp.zeros(())}
+    target = {"w": jnp.full((3,), 2.5), "b": jnp.asarray(-1.0)}
+    ema = ema_init(params)
+    for _ in range(400):
+        ema = ema_update(ema, target, decay=0.99, warmup=10)
+    assert int(ema.step) == 400
+    for leaf, ref in zip(jax.tree.leaves(ema_params(ema)),
+                         jax.tree.leaves(target)):
+        np.testing.assert_allclose(np.asarray(leaf), np.asarray(ref),
+                                   atol=1e-2)
+
+
+def test_ema_warmup_tracks_faster_than_fixed_decay():
+    """Early on, the warmed-up decay must track the stream much faster than
+    the asymptotic decay would (the whole point of the warmup)."""
+    d5 = float(ema_decay_schedule(jnp.asarray(5), 0.999, warmup=10))
+    assert d5 < 0.5          # (1+5)/(10+5) = 0.4, nowhere near 0.999
+    d_inf = float(ema_decay_schedule(jnp.asarray(10_000), 0.999, warmup=10))
+    assert d_inf == pytest.approx(0.999)
+
+
+def test_ema_validation():
+    ema = ema_init({"w": jnp.zeros(())})
+    with pytest.raises(ValueError):
+        ema_update(ema, {"w": jnp.ones(())}, decay=1.0)
+    with pytest.raises(ValueError):
+        ema_update(ema, {"w": jnp.ones(())}, warmup=0)
+
+
+def test_ema_update_is_jittable():
+    params = {"w": jnp.ones((4,))}
+    ema = ema_init(params)
+    step = jax.jit(lambda e, p: ema_update(e, p, decay=0.9, warmup=2))
+    ema = step(ema, {"w": jnp.full((4,), 3.0)})
+    assert isinstance(ema, EmaState) and int(ema.step) == 1
+
+
+# --------------------------------------------------------------------------- #
+# Data-consistency refinement + residual
+# --------------------------------------------------------------------------- #
+def test_projection_residual_zero_on_exact_data(small_proj):
+    proj = small_proj
+    x = jnp.ones(proj.spec.geom.vol.shape) * 0.02
+    y = proj(x)
+    assert float(projection_residual(proj, x, y)) < 1e-5
+    assert float(projection_residual(proj, 0.0 * x, y)) == pytest.approx(1.0)
+
+
+def test_refinement_reduces_dc_residual(small_proj):
+    proj = small_proj
+    geom = proj.spec.geom
+    rng = np.random.default_rng(0)
+    gt = jnp.asarray(rng.random(geom.vol.shape), jnp.float32) * 0.02
+    y = proj(gt)
+    mask = (jnp.arange(geom.n_angles) % 2 == 0).astype(jnp.float32)
+    m3 = mask[:, None, None]
+    x_net = gt + jnp.asarray(rng.normal(size=geom.vol.shape),
+                             jnp.float32) * 0.004
+    xr, completed = complete_and_refine(proj, x_net, y, m3,
+                                        n_iters=25, beta=0.05)
+    r_net = float(projection_residual(proj, x_net, y, m3))
+    r_ref = float(projection_residual(proj, xr, y, m3))
+    assert r_ref < r_net
+    # completed sinogram keeps the measured views verbatim
+    np.testing.assert_allclose(np.asarray(completed * m3),
+                               np.asarray(y * m3), rtol=1e-5)
+
+
+def test_refine_beta_limit_returns_prior(small_proj):
+    """beta -> large means 'trust the network': the solution stays at
+    x_net."""
+    proj = small_proj
+    gt = jnp.ones(proj.spec.geom.vol.shape) * 0.02
+    y = proj(gt)
+    m3 = jnp.ones((proj.spec.geom.n_angles, 1, 1))
+    x_net = gt * 0.5
+    xr = data_consistency_refine(proj, x_net, y, m3, n_iters=10, beta=1e6)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x_net), atol=1e-4)
